@@ -1,0 +1,10 @@
+"""Thin re-export: canonical implementation in repro.analysis.hlo_analysis."""
+
+from repro.analysis.hlo_analysis import analyze, parse_hlo  # noqa: F401
+
+if __name__ == "__main__":
+    import json
+    import sys
+
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read()), indent=2))

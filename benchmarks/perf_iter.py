@@ -1,0 +1,122 @@
+"""§Perf hillclimb driver: run named dry-run variants of the three chosen
+cells and emit a before/after table of roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter [--cell qwen2_train] \
+        [--out benchmarks/results/perf]
+
+Cells (per the assignment: worst fraction / most collective-bound / most
+paper-representative):
+  1. qwen2_train   — qwen2-72b x train_4k, single pod
+  2. jamba_train   — jamba-1.5-large-398b x train_4k, single pod
+  3. hla_long      — qwen2-72b + hla2 x long_500k decode, single pod
+  plus paper_vs_opt — paper-faithful token-scan vs chunkwise HLA on the
+  qwen2+hla2 train cell (the reproduce-then-beyond comparison).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "perf")
+
+# name -> (arch, shape, extra dryrun args)
+EXPERIMENTS = {
+    "qwen2_train": [
+        ("base_mb8", "qwen2-72b", "train_4k", ["--microbatches", "8"]),
+        ("A_bf16gather_mb8", "qwen2-72b", "train_4k",
+         ["--microbatches", "8", "--gather-dtype", "bfloat16"]),
+        ("B_bf16gather_mb4", "qwen2-72b", "train_4k",
+         ["--microbatches", "4", "--gather-dtype", "bfloat16"]),
+        ("C_bf16gather_mb2", "qwen2-72b", "train_4k",
+         ["--microbatches", "2", "--gather-dtype", "bfloat16"]),
+    ],
+    "jamba_train": [
+        ("base_mb16", "jamba-1.5-large-398b", "train_4k",
+         ["--microbatches", "16"]),
+        ("A_bf16gather_mb16", "jamba-1.5-large-398b", "train_4k",
+         ["--microbatches", "16", "--gather-dtype", "bfloat16"]),
+        ("B_bf16gather_mb8", "jamba-1.5-large-398b", "train_4k",
+         ["--microbatches", "8", "--gather-dtype", "bfloat16"]),
+    ],
+    "hla_long": [
+        ("base", "qwen2-72b", "long_500k", []),
+        ("A_bf16gather", "qwen2-72b", "long_500k",
+         ["--gather-dtype", "bfloat16"]),
+        ("B_chunk64", "qwen2-72b", "long_500k",
+         ["--gather-dtype", "bfloat16", "--hla-chunk", "64"]),
+    ],
+    "paper_vs_opt": [
+        ("paper_scan", "qwen2-72b", "train_4k",
+         ["--mixer", "hla2", "--hla-impl", "scan", "--microbatches", "8"]),
+        ("opt_chunk128", "qwen2-72b", "train_4k",
+         ["--mixer", "hla2", "--hla-impl", "chunkwise", "--microbatches", "8"]),
+        ("opt_chunk256", "qwen2-72b", "train_4k",
+         ["--mixer", "hla2", "--hla-impl", "chunkwise", "--hla-chunk", "256",
+          "--microbatches", "8"]),
+        ("opt_chunk64", "qwen2-72b", "train_4k",
+         ["--mixer", "hla2", "--hla-impl", "chunkwise", "--hla-chunk", "64",
+          "--microbatches", "8"]),
+    ],
+}
+
+
+def run_variant(name, arch, shape, extra, timeout=2400):
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, f"{name}.json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", out, *extra]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    if proc.returncode != 0:
+        return {"name": name, "ok": False, "err": proc.stderr[-1500:]}
+    with open(out) as f:
+        res = json.load(f)
+    res["name"] = name
+    res["ok"] = True
+    res["wall_s"] = round(time.time() - t0, 1)
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
+def fmt(res):
+    if not res.get("ok"):
+        return f"| {res['name']} | FAILED | | | | |"
+    r = res["roofline"]
+    return (
+        f"| {res['name']} | {r['compute_s']:.2f} | {r['memory_s']:.2f} | "
+        f"{r['collective_s']:.2f} | {r['bottleneck'].replace('_s','')} | "
+        f"{res['memory']['peak_bytes']/2**30:.2f} |"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(EXPERIMENTS) + [None])
+    args = ap.parse_args()
+    cells = [args.cell] if args.cell else list(EXPERIMENTS)
+    for cell in cells:
+        print(f"\n#### {cell}")
+        print("| variant | compute (s) | memory (s) | collective (s) | "
+              "bottleneck | peak GiB |")
+        print("|---|---|---|---|---|---|")
+        for name, arch, shape, extra in EXPERIMENTS[cell]:
+            res = run_variant(f"{cell}__{name}", arch, shape, extra)
+            print(fmt({**res, "name": name}), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Roofline matrix driver: baseline dry-run for every (arch x shape x mesh).
+
+Runs each cell in a fresh subprocess (device count is locked at jax init)
+via ``repro.launch.dryrun``, auto-escalating train-cell microbatches until
+the per-device peak fits the HBM budget.  Results land in
+``benchmarks/results/<arch>__<shape>__<mesh>.json`` and are summarized into
+the §Dry-run / §Roofline tables by ``benchmarks/report.py``.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--only arch:shape]
+        [--mesh single|multi|both] [--budget-gib 15.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "jamba-1.5-large-398b",
+    "codeqwen1.5-7b",
+    "qwen2-72b",
+    "nemotron-4-15b",
+    "deepseek-67b",
+    "whisper-small",
+    "granite-moe-3b-a800m",
+    "qwen3-moe-30b-a3b",
+    "rwkv6-7b",
+    "internvl2-2b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+MB_LADDER = [1, 4, 8, 16, 32]
+
+
+def run_cell(arch, shape, multi_pod, *, microbatches=1, timeout=3600,
+             extra=()):
+    tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+    out = os.path.join(RESULTS, tag + ".json")
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--json", out,
+        "--microbatches", str(microbatches), *extra,
+    ]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    if proc.returncode != 0:
+        return {"tag": tag, "ok": False, "err": proc.stderr[-2000:],
+                "wall_s": time.time() - t0}
+    with open(out) as f:
+        res = json.load(f)
+    res["ok"] = True
+    res["tag"] = tag
+    res["wall_s"] = round(time.time() - t0, 1)
+    res["microbatches"] = microbatches
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
+def run_matrix(cells, budget_gib, log):
+    done = []
+    for arch, shape, multi in cells:
+        tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+        path = os.path.join(RESULTS, tag + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                prev = json.load(f)
+            if prev.get("ok") and prev["memory"]["peak_bytes"] / 2**30 <= budget_gib:
+                log(f"[skip cached] {tag}")
+                done.append(prev)
+                continue
+        res = best = None
+        prev_peak = None
+        ladder = MB_LADDER if shape.startswith("train") else [1]
+        for mb in ladder:
+            res = run_cell(arch, shape, multi, microbatches=mb)
+            if not res["ok"]:
+                log(f"[FAIL] {tag} mb={mb}: {res['err'][-400:]}")
+                break
+            peak = res["memory"]["peak_bytes"] / 2**30
+            log(
+                f"[ok] {tag} mb={mb}: peak {peak:.2f} GiB, "
+                f"compile {res['compile_s']}s, "
+                f"bottleneck {res['roofline']['bottleneck']}"
+            )
+            if best is None or peak < best["memory"]["peak_bytes"] / 2**30:
+                best = res
+            if peak <= budget_gib:
+                break
+            if prev_peak is not None and peak >= prev_peak:
+                break  # escalation stopped helping
+            prev_peak = peak
+        if best is not None:
+            path = os.path.join(RESULTS, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(best, f, indent=2)
+        done.append(best if best is not None else res)
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="arch:shape filter")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--budget-gib", type=float, default=15.0)
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if args.only:
+                a, s = args.only.split(":")
+                if arch != a or shape != s:
+                    continue
+            for m in meshes:
+                cells.append((arch, shape, m))
+
+    def log(msg):
+        print(f"{time.strftime('%H:%M:%S')} {msg}", flush=True)
+
+    t0 = time.time()
+    results = run_matrix(cells, args.budget_gib, log)
+    ok = sum(1 for r in results if r and r.get("ok"))
+    log(f"matrix done: {ok}/{len(results)} cells OK in {(time.time()-t0)/60:.1f} min")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The paper is algorithmic
+(no empirical tables); its claims map to:
+
+* Fig. 1/2 + Thms 3.1/4.1/6.1/7.1/7.2 — `equivalence` (views agree, and
+  timing of each view);
+* §5 complexity (linear time, O(1) state)  — `complexity` (us/token vs n),
+  `statesize` (state bytes vs n, constant);
+* §4 chunk-parallel training — `chunkwidth` (throughput vs w);
+* the multi-pod roofline table is produced by `benchmarks.roofline`
+  (separate long-running driver) and summarized by `benchmarks.report`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _mk(rng, B, H, n, d):
+    q = jnp.asarray(rng.randn(B, H, n, d) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, n, d) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, n, d) * 0.5, jnp.float32)
+    g = jnp.asarray(rng.uniform(0.9, 0.99, (B, H)), jnp.float32)
+    return q, k, v, g
+
+
+def bench_equivalence(rows):
+    from repro.core.hla2 import (
+        hla2_chunkwise,
+        hla2_naive,
+        hla2_scan,
+        hla2_serial,
+    )
+
+    rng = np.random.RandomState(0)
+    q, k, v, g = _mk(rng, 2, 2, 256, 32)
+    o_ref = hla2_naive(q, k, v, g)
+    impls = {
+        "hla2_serial": jax.jit(lambda *a: hla2_serial(*a)[0]),
+        "hla2_scan": jax.jit(lambda *a: hla2_scan(*a)[0]),
+        "hla2_chunkwise": jax.jit(lambda *a: hla2_chunkwise(*a, chunk=64)[0]),
+    }
+    for name, fn in impls.items():
+        err = float(jnp.max(jnp.abs(fn(q, k, v, g) - o_ref)))
+        us = _timeit(fn, q, k, v, g)
+        rows.append((f"equivalence/{name}", us, f"max_err={err:.2e}"))
+
+
+def bench_complexity(rows):
+    """us/token vs n: HLA2 chunkwise is linear; the naive path quadratic."""
+    from repro.core.hla2 import hla2_chunkwise, hla2_naive
+
+    rng = np.random.RandomState(1)
+    chunked = jax.jit(lambda a, b, c: hla2_chunkwise(a, b, c, chunk=64)[0])
+    naive = jax.jit(lambda a, b, c: hla2_naive(a, b, c))
+    per_tok = {}
+    for n in (256, 512, 1024, 2048):
+        q, k, v, _ = _mk(rng, 1, 2, n, 32)
+        us = _timeit(chunked, q, k, v, iters=3)
+        per_tok[n] = us / n
+        rows.append((f"complexity/hla2_chunk_n{n}", us, f"us_per_tok={us/n:.2f}"))
+    for n in (256, 512, 1024):
+        q, k, v, _ = _mk(rng, 1, 2, n, 32)
+        us = _timeit(naive, q, k, v, iters=3)
+        rows.append((f"complexity/naive_n{n}", us, f"us_per_tok={us/n:.2f}"))
+    growth = per_tok[2048] / per_tok[256]
+    rows.append((
+        "complexity/linear_check", 0.0,
+        f"us_per_tok growth 256->2048 = {growth:.2f}x (1.0 = perfectly linear)",
+    ))
+
+
+def bench_statesize(rows):
+    """Decode state bytes: constant in context length (vs a KV cache)."""
+    from repro.configs import get_config
+    from repro.models import lm
+
+    cfg = get_config("hla-1b", reduced=True)
+    for n_ctx in (1024, 8192, 65536):
+        states = jax.eval_shape(lambda: lm.lm_init_states(cfg, 1, n_ctx))
+        hla_bytes = sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize
+            for x in jax.tree.leaves(states)
+        )
+        cfg_sm = cfg.replace(mixer="softmax")
+        states_sm = jax.eval_shape(
+            lambda: lm.lm_init_states(cfg_sm, 1, n_ctx)
+        )
+        kv_bytes = sum(
+            int(np.prod(x.shape)) * x.dtype.itemsize
+            for x in jax.tree.leaves(states_sm)
+        )
+        rows.append((
+            f"statesize/ctx{n_ctx}", 0.0,
+            f"hla_state={hla_bytes/2**20:.2f}MiB kv_cache={kv_bytes/2**20:.2f}MiB",
+        ))
+
+
+def bench_chunkwidth(rows):
+    from repro.core.hla2 import hla2_chunkwise
+
+    rng = np.random.RandomState(2)
+    q, k, v, g = _mk(rng, 2, 4, 2048, 64)
+    for w in (16, 32, 64, 128, 256):
+        fn = jax.jit(
+            lambda a, b, c, gg, w=w: hla2_chunkwise(a, b, c, gg, chunk=w)[0]
+        )
+        us = _timeit(fn, q, k, v, g, iters=3)
+        rows.append((f"chunkwidth/w{w}", us, f"tok_per_s={2048*2/us*1e6:.0f}"))
+
+
+def bench_kernels(rows):
+    """Pallas kernel (interpret) correctness + jnp reference timing."""
+    from repro.kernels import ref as kref
+    from repro.kernels.hla2_chunk import hla2_chunk_pallas
+
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(4, 256, 64) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.randn(4, 256, 64) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.randn(4, 256, 64) * 0.5, jnp.float32)
+    o_p, _ = hla2_chunk_pallas(q, k, v, None, chunk=64, interpret=True)
+    o_r, _ = kref.hla2_chunk_ref(q, k, v, None, chunk=64)
+    err = float(jnp.max(jnp.abs(o_p - o_r)))
+    fn = jax.jit(lambda a, b, c: kref.hla2_chunk_ref(a, b, c, None, chunk=64)[0])
+    us = _timeit(fn, q, k, v, iters=3)
+    rows.append(("kernels/hla2_chunk_ref", us, f"pallas_interpret_err={err:.2e}"))
+
+
+def bench_decode_throughput(rows):
+    """Streaming decode (view A): us/token for the reduced paper model."""
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.models.param import init_params
+
+    cfg = get_config("hla-1b", reduced=True)
+    params = init_params(lm.lm_specs(cfg), jax.random.key(0))
+    B = 4
+    states = lm.lm_init_states(cfg, B, 64)
+    tok = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.zeros((B, 1), jnp.int32)
+
+    @jax.jit
+    def step(params, tok, states, pos):
+        lg, st, _ = lm.lm_apply(
+            params, tok, cfg, states=states, positions=pos, mode="decode"
+        )
+        return lg, st
+
+    lg, states = step(params, tok, states, pos)  # compile
+    t0 = time.perf_counter()
+    iters = 20
+    for i in range(iters):
+        lg, states = step(params, tok, states, pos + i)
+    jax.block_until_ready(lg)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append(("decode/hla2_reduced", us, f"tok_per_s={B/us*1e6:.0f}"))
+
+
+def main() -> None:
+    rows = []
+    bench_equivalence(rows)
+    bench_complexity(rows)
+    bench_statesize(rows)
+    bench_chunkwidth(rows)
+    bench_kernels(rows)
+    bench_decode_throughput(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

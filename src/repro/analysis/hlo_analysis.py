@@ -1,0 +1,344 @@
+"""Loop-aware HLO analysis for the roofline terms.
+
+``compiled.cost_analysis()`` counts each while-loop *body once* — a
+scan-over-layers model therefore under-reports FLOPs/bytes by ~n_layers x,
+and collectives inside the loop likewise (verified empirically; see
+EXPERIMENTS.md §Roofline "methodology").  XLA however annotates every while
+with ``backend_config={"known_trip_count": {"n": ...}}``, so an exact
+loop-aware account is possible from the compiled text:
+
+* computations are parsed into per-op defs (symbol -> shape);
+* execution multipliers propagate ENTRY=1, while body/cond x trip_count,
+  fusions/calls inherit the caller's multiplier;
+* FLOPs: 2 * prod(out_shape) * prod(lhs contracting dims) per dot
+  (fusion-internal dots included);
+* bytes: per-op operand+output bytes in non-fusion computations (fusion
+  internals live in registers — matches XLA's own bytes_accessed model);
+* collective bytes: output-shape bytes per collective op (the gathered /
+  reduced size — wire-bytes upper bound per device), tracked per kind.
+
+All numbers are per-device (the HLO is the SPMD-partitioned module).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    # SSA bookkeeping / no HBM traffic of their own (loop bodies are
+    # accounted separately via multipliers):
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "while", "conditional", "call", "partition-id",
+    "replica-id", "optimization-barrier", "reshape",
+}
+
+_shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+_def_re = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_header_re = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->")
+
+
+def _shapes_bytes(text):
+    """Sum bytes over every typed shape literal in `text`."""
+    total = 0
+    for dt, dims in _shape_re.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_bytes: int
+    out_shapes: str  # raw text of the output type
+    operands: list
+    rhs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)  # name -> out type text
+    is_entry: bool = False
+    param_order: list = field(default_factory=list)  # parameter(i) -> name
+
+    def slice_like_param_bytes(self):
+        """For each parameter index: if every in-computation use is a
+        slicing op (dynamic-slice/slice/gather), the fusion only reads the
+        slice — return {idx: slice_out_bytes}; else omit the index."""
+        uses = {name: [] for name in self.param_order}
+        for op in self.ops:
+            for o in op.operands:
+                if o in uses:
+                    uses[o].append(op)
+        out = {}
+        for idx, name in enumerate(self.param_order):
+            ops = uses.get(name, [])
+            if ops and all(
+                u.kind in ("dynamic-slice", "slice", "gather") for u in ops
+            ):
+                out[idx] = sum(u.out_bytes for u in ops)
+        return out
+
+
+_KIND_RE = re.compile(
+    r"\b([a-z][a-z0-9\-]*)\("
+)
+
+
+def parse_hlo(text: str):
+    comps = {}
+    cur = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        hm = _header_re.match(s)
+        if hm and s.endswith("{"):
+            cur = Computation(hm.group(1))
+            cur.is_entry = s.startswith("ENTRY")
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry_name = cur.name
+            continue
+        if s == "}" or cur is None:
+            continue
+        dm = _def_re.match(s)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        # output type: everything before the op kind token
+        km = None
+        for m in _KIND_RE.finditer(rhs):
+            tok = m.group(1)
+            if tok in ("metadata", "backend_config", "calls", "f32", "bf16"):
+                continue
+            km = m
+            break
+        kind = km.group(1) if km else "unknown"
+        out_text = rhs[: km.start()] if km else rhs
+        # operands: inside the first (...) after the kind
+        operands = []
+        if km:
+            depth = 0
+            buf = ""
+            for ch in rhs[km.end() - 1:]:
+                if ch == "(":
+                    depth += 1
+                    if depth == 1:
+                        continue
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                if depth >= 1:
+                    buf += ch
+            operands = re.findall(r"%[\w.\-]+", buf)
+        cur.defs[name] = out_text
+        if kind == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                idx = int(pm.group(1))
+                while len(cur.param_order) <= idx:
+                    cur.param_order.append(None)
+                cur.param_order[idx] = name
+        cur.ops.append(Op(name, kind, _shapes_bytes(out_text), out_text,
+                          operands, rhs))
+    return comps, entry_name
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+
+
+def _dot_flops(op: Op, defs):
+    out = 1
+    m = _shape_re.search(op.out_shapes)
+    if not m:
+        return 0
+    for d in m.group(2).split(","):
+        if d:
+            out *= int(d)
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+    if not cdims or not op.operands:
+        return 2 * out  # dot with scalar contraction
+    lhs_type = defs.get(op.operands[0], "")
+    lm = _shape_re.search(lhs_type)
+    if not lm:
+        return 2 * out
+    ldims = [int(x) for x in lm.group(2).split(",") if x]
+    k = 1
+    for idx in cdims.group(1).split(","):
+        if idx and int(idx) < len(ldims):
+            k *= ldims[int(idx)]
+    return 2 * out * k
+
+
+def analyze(text: str, details: bool = False):
+    """Loop-aware per-device totals: flops, bytes, collective bytes/counts."""
+    comps, entry = parse_hlo(text)
+    by_kind = defaultdict(float)
+
+    # multipliers: BFS from entry
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            if op.kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.rhs)
+                if tm:
+                    trip = int(tm.group(1))
+                for rx in (_BODY_RE, _COND_RE):
+                    bm = rx.search(op.rhs)
+                    if bm:
+                        child = bm.group(1)
+                        mult[child] += m * trip
+                        if child not in seen:
+                            seen.add(child)
+                            order.append(child)
+            else:
+                for cm in _CALLS_RE.finditer(op.rhs):
+                    child = cm.group(1)
+                    mult[child] += m
+                    if child not in seen:
+                        seen.add(child)
+                        order.append(child)
+                # conditional branches
+                for bm in re.finditer(
+                    r"(?:true_computation|false_computation|branch_computations)="
+                    r"\{?([%\w.\-, ]+)\}?", op.rhs
+                ):
+                    for child in re.findall(r"%[\w.\-]+", bm.group(1)):
+                        mult[child] += m
+                        if child not in seen:
+                            seen.add(child)
+                            order.append(child)
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+    fusion_names = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                for cm in _CALLS_RE.finditer(op.rhs):
+                    fusion_names.add(cm.group(1))
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_names
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp.defs)
+            if in_fusion:
+                continue  # fusion internals: registers, no HBM traffic
+            if op.kind in _SKIP_BYTES_OPS:
+                continue
+            if op.kind.endswith("-done"):
+                continue
+            # XLA-style special cases: slicing ops touch only the slice,
+            # not the sliced-into buffer.
+            if op.kind in ("dynamic-slice", "slice", "gather"):
+                nbytes = 2 * op.out_bytes
+            elif op.kind == "dynamic-update-slice":
+                upd = (
+                    _shapes_bytes(comp.defs.get(op.operands[1], ""))
+                    if len(op.operands) > 1
+                    else op.out_bytes
+                )
+                nbytes = 2 * upd
+            elif op.kind == "scatter":
+                upd = (
+                    _shapes_bytes(comp.defs.get(op.operands[-1], ""))
+                    if op.operands
+                    else op.out_bytes
+                )
+                nbytes = 2 * upd + op.out_bytes
+            elif op.kind == "fusion":
+                nbytes = op.out_bytes
+                callee = None
+                cm = _CALLS_RE.search(op.rhs)
+                if cm:
+                    callee = comps.get(cm.group(1))
+                sliced = callee.slice_like_param_bytes() if callee else {}
+                for i, o in enumerate(op.operands):
+                    if i in sliced:
+                        nbytes += sliced[i]
+                        continue
+                    t = comp.defs.get(o)
+                    if t:
+                        nbytes += _shapes_bytes(t)
+            else:
+                nbytes = op.out_bytes
+                for o in op.operands:
+                    t = comp.defs.get(o)
+                    if t:
+                        nbytes += _shapes_bytes(t)
+            bytes_acc += m * nbytes
+            if details:
+                by_kind[op.kind] += m * nbytes
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base in _COLLECTIVES:
+                coll_bytes[base] += m * op.out_bytes
+                coll_counts[base] += int(m)
+
+    out = {
+        "flops": flops,
+        "bytes": bytes_acc,
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "collective_total": sum(coll_bytes.values()),
+    }
+    if details:
+        out["bytes_by_kind"] = dict(
+            sorted(by_kind.items(), key=lambda kv: -kv[1])[:15]
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read()), indent=2))

@@ -1,0 +1,3 @@
+"""Assigned architecture configs (public literature) + the paper's own."""
+
+from .registry import get_config, list_archs  # noqa: F401

@@ -1,0 +1,28 @@
+"""The paper's own architecture: an HLA2 LM (~1.3B) for end-to-end runs.
+
+Drop-in replacement of the attention sublayer per §5.2; unnormalized
+masked HLA2 (Eq. 3.3) with learned per-head decay, chunk 128.
+"""
+
+from ..models.config import HLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hla-1b",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5504,
+    vocab=50304,
+    mixer="hla2",
+    mlp="swiglu",
+    hla=HLAConfig(variant="hla2", chunk=128, decay="learned"),
+    remat="full",
+)
+
+
+def reduced():
+    return CONFIG.replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
+        remat="none", dtype="float32",
+    )

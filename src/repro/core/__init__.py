@@ -1,0 +1,52 @@
+"""Core HLA operators (the paper's contribution) in composable JAX.
+
+Four exactly-equivalent computation paths per operator (serial recurrence,
+materialized oracle, token-level associative scan, chunkwise masked-matmul)
+— see DESIGN.md §1–2.
+"""
+
+from .ahla import (
+    AHLAState,
+    ahla,
+    ahla_chunkwise,
+    ahla_init_state,
+    ahla_naive,
+    ahla_scan,
+    ahla_serial,
+    ahla_step,
+)
+from .hla2 import (
+    HLA2State,
+    hla2,
+    hla2_chunkwise,
+    hla2_init_state,
+    hla2_naive,
+    hla2_scan,
+    hla2_serial,
+    hla2_step,
+)
+from .hla3 import (
+    HLA3ChunkState,
+    HLA3ExactState,
+    HLA3PaperState,
+    hla3,
+    hla3_exact_chunkwise,
+    hla3_exact_init_state,
+    hla3_exact_naive,
+    hla3_exact_serial,
+    hla3_exact_step,
+    hla3_paper_chunkwise,
+    hla3_paper_init_state,
+    hla3_paper_naive,
+    hla3_paper_scan,
+    hla3_paper_serial,
+    hla3_paper_step,
+)
+from .linear_attn import (
+    LinAttnState,
+    linattn,
+    linattn_chunkwise,
+    linattn_init_state,
+    linattn_naive,
+    linattn_step,
+)

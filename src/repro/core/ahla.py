@@ -1,0 +1,276 @@
+"""Asymmetric Higher-order Linear Attention (AHLA) — paper Section 6.
+
+    AHLA(Q,K,V) = ((A A) . L) V,   A = L . (Q K^T)
+
+Since A is lower-triangular, (A A) is already causal; the operator factors
+as two first-order passes:  o = A (A V)  — i.e. ``LinAttn(q, k, LinAttn(q,
+k, v))``.  We provide:
+
+* ``ahla_naive``     — materialized oracle.
+* ``ahla_serial``    — Algorithm 2 verbatim (streaming state P, m, E, n).
+* ``ahla_scan``      — token-level associative scan with the Eq. (6.2)
+                       monoid on (R, P, m, E, n) (+ decay-corrected variant).
+* ``ahla_chunkwise`` — two chunked linear-attention passes (TPU-adapted).
+
+Decay erratum (mirrors the HLA2 one, DESIGN.md §7): the paper's decayed
+concatenation uses the *decayed* segment moment ``R_B`` in the cross terms,
+which breaks associativity.  The consistent operator carries the
+*undecayed* cross moment ``R~_B = sum_{i in B} k_i q_i^T`` (composing
+purely additively) with cross term ``rho_B * R~_B P_A``.  At gamma=1 the
+two coincide (Eq. 6.2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .hla2 import _compute_dtype, _decay_matrices, _gamma_arr
+from .linear_attn import LinAttnState, linattn_chunkwise
+
+
+class AHLAState(NamedTuple):
+    """Streaming state (Fig. 2(A)) + undecayed cross moment for scans."""
+
+    R: jax.Array  # (..., d, d)  sum k q^T (undecayed; scan-only, Section 6.2)
+    P: jax.Array  # (..., d, dv)
+    m: jax.Array  # (..., d)
+    E: jax.Array  # (..., d, dv)
+    n: jax.Array  # (..., d)
+
+
+def ahla_init_state(batch_shape, d, dv, dtype=jnp.float32) -> AHLAState:
+    z = functools.partial(jnp.zeros, dtype=dtype)
+    return AHLAState(
+        R=z(batch_shape + (d, d)),
+        P=z(batch_shape + (d, dv)),
+        m=z(batch_shape + (d,)),
+        E=z(batch_shape + (d, dv)),
+        n=z(batch_shape + (d,)),
+    )
+
+
+def ahla_step(
+    state: AHLAState, q_t, k_t, v_t, gamma=None,
+    *, normalize: bool = False, eps: float = 1e-6,
+):
+    """Algorithm 2, one token.  E uses the *inclusive* P_t (Theorem 6.1)."""
+    dtype = state.P.dtype
+    q_t, k_t, v_t = q_t.astype(dtype), k_t.astype(dtype), v_t.astype(dtype)
+    g = _gamma_arr(gamma, q_t.shape[:-1], dtype)
+    gv, gm = g[..., None], g[..., None, None]
+
+    P = gm * state.P + k_t[..., :, None] * v_t[..., None, :]
+    m = gv * state.m + k_t
+    r = jnp.einsum("...d,...de->...e", q_t, P)  # q_t^T P_t
+    s = jnp.einsum("...d,...d->...", q_t, m)  # q_t^T m_t
+    E = gm * state.E + k_t[..., :, None] * r[..., None, :]
+    nn = gv * state.n + s[..., None] * k_t
+    R = state.R + k_t[..., :, None] * q_t[..., None, :]  # undecayed (scan aux)
+    o = jnp.einsum("...d,...de->...e", q_t, E)
+    if normalize:
+        den = jnp.einsum("...d,...d->...", q_t, nn)
+        o = o / (den[..., None] + eps)
+    return AHLAState(R, P, m, E, nn), o
+
+
+def ahla_serial(
+    q, k, v, gamma=None, *, normalize: bool = False, eps: float = 1e-6,
+    state: Optional[AHLAState] = None,
+):
+    batch_shape = q.shape[:-2]
+    d, dv = q.shape[-1], v.shape[-1]
+    if state is None:
+        state = ahla_init_state(batch_shape, d, dv, _compute_dtype(q))
+
+    def body(st, qkv):
+        st, o = ahla_step(st, *qkv, gamma, normalize=normalize, eps=eps)
+        return st, o
+
+    qs, ks, vs = (jnp.moveaxis(x, -2, 0) for x in (q, k, v))
+    state, os_ = jax.lax.scan(body, state, (qs, ks, vs))
+    return jnp.moveaxis(os_, 0, -2).astype(v.dtype), state
+
+
+def ahla_naive(
+    q, k, v, gamma=None, *, normalize: bool = False, eps: float = 1e-6
+):
+    """Oracle: o = A_g (A_g V) with A_g = (QK^T) . L_gamma (Eq. 6.1)."""
+    dtype = _compute_dtype(q)
+    q32, k32, v32 = q.astype(dtype), k.astype(dtype), v.astype(dtype)
+    n = q.shape[-2]
+    g = _gamma_arr(gamma, q.shape[:-2], dtype)
+    Lg, _ = _decay_matrices(n, g, dtype)
+    A = jnp.einsum("...td,...jd->...tj", q32, k32) * Lg
+    AA = jnp.einsum("...ti,...ij->...tj", A, A)
+    num = jnp.einsum("...tj,...je->...te", AA, v32)
+    if normalize:
+        num = num / (jnp.sum(AA, -1)[..., None] + eps)
+    return num.astype(v.dtype)
+
+
+# -------------------- token-level associative scan (Eq. 6.2) ---------------
+
+
+class AHLADecayState(NamedTuple):
+    R: jax.Array
+    P: jax.Array
+    m: jax.Array
+    E: jax.Array
+    n: jax.Array
+    rho: jax.Array
+
+
+def ahla_op(a: AHLAState, b: AHLAState) -> AHLAState:
+    """Undecayed concatenation, Eq. (6.2)."""
+    return AHLAState(
+        R=a.R + b.R,
+        P=a.P + b.P,
+        m=a.m + b.m,
+        E=a.E + b.E + jnp.einsum("...ij,...je->...ie", b.R, a.P),
+        n=a.n + b.n + jnp.einsum("...ij,...j->...i", b.R, a.m),
+    )
+
+
+def ahla_op_decay(a: AHLADecayState, b: AHLADecayState) -> AHLADecayState:
+    """Corrected decay-aware concatenation: R~ composes undecayed."""
+    rB, rBv = b.rho[..., None, None], b.rho[..., None]
+    return AHLADecayState(
+        R=a.R + b.R,
+        P=rB * a.P + b.P,
+        m=rBv * a.m + b.m,
+        E=rB * a.E + b.E + rB * jnp.einsum("...ij,...je->...ie", b.R, a.P),
+        n=rBv * a.n + b.n + rBv * jnp.einsum("...ij,...j->...i", b.R, a.m),
+        rho=a.rho * b.rho,
+    )
+
+
+def ahla_op_decay_paper(a: AHLADecayState, b: AHLADecayState) -> AHLADecayState:
+    """Paper's printed decayed concatenation (Section 6.2) with decayed R.
+
+    Not associative — kept for the erratum property test only.
+    """
+    rB, rBv = b.rho[..., None, None], b.rho[..., None]
+    return AHLADecayState(
+        R=rB * a.R + b.R,
+        P=rB * a.P + b.P,
+        m=rBv * a.m + b.m,
+        E=rB * a.E + b.E + jnp.einsum("...ij,...je->...ie", b.R, rB * a.P),
+        n=rBv * a.n + b.n + jnp.einsum("...ij,...j->...i", b.R, rBv * a.m),
+        rho=a.rho * b.rho,
+    )
+
+
+def ahla_scan(
+    q, k, v, gamma=None, *, normalize: bool = False, eps: float = 1e-6,
+    state: Optional[AHLAState] = None,
+):
+    """Token-level associative scan under Eq. (6.2) (+ corrected decay)."""
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    n = q.shape[-2]
+    q32 = jnp.moveaxis(q.astype(dtype), -2, 0)
+    k32 = jnp.moveaxis(k.astype(dtype), -2, 0)
+    v32 = jnp.moveaxis(v.astype(dtype), -2, 0)
+
+    dR = k32[..., :, None] * q32[..., None, :]
+    dP = k32[..., :, None] * v32[..., None, :]
+    dm = k32
+    # single-token segment: E = k (q^T P_incl) = k (q^T k) v^T, n analog.
+    qk = jnp.einsum("n...d,n...d->n...", q32, k32)
+    dE = qk[..., None, None] * dP
+    dn = qk[..., None] * k32
+    g = jnp.broadcast_to(
+        _gamma_arr(gamma, batch_shape, dtype)[None], (n,) + batch_shape
+    )
+    elems = AHLADecayState(dR, dP, dm, dE, dn, g)
+    inc = jax.lax.associative_scan(ahla_op_decay, elems, axis=0)
+    R, P, m, E, nn = inc.R, inc.P, inc.m, inc.E, inc.n
+    if state is not None:
+        rho_seg = jnp.cumprod(g, axis=0)
+        a = AHLADecayState(
+            state.R, state.P, state.m, state.E, state.n,
+            jnp.ones(batch_shape, dtype),
+        )
+        merged = ahla_op_decay(a, AHLADecayState(R, P, m, E, nn, rho_seg))
+        R, P, m, E, nn = merged.R, merged.P, merged.m, merged.E, merged.n
+    o = jnp.einsum("n...d,n...de->n...e", q32, E)
+    if normalize:
+        den = jnp.einsum("n...d,n...d->n...", q32, nn)
+        o = o / (den[..., None] + eps)
+    out = jnp.moveaxis(o, 0, -2).astype(v.dtype)
+    return out, AHLAState(R[-1], P[-1], m[-1], E[-1], nn[-1])
+
+
+# -------------------- chunkwise (two linear-attention passes) --------------
+
+
+def ahla_chunkwise(
+    q, k, v, gamma=None, *, chunk: int = 64, normalize: bool = False,
+    eps: float = 1e-6, state: Optional[AHLAState] = None,
+):
+    """AHLA = LinAttn(q, k, LinAttn(q, k, v)) with chunked passes.
+
+    The (P, m) carry feeds the inner pass; (E, n) the outer.  Exactly the
+    serial recurrence (Theorem 6.1), MXU-shaped.
+    """
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    d, dv = q.shape[-1], v.shape[-1]
+    if state is None:
+        state = ahla_init_state(batch_shape, d, dv, dtype)
+    inner0 = LinAttnState(state.P.astype(dtype), state.m.astype(dtype))
+    outer0 = LinAttnState(state.E.astype(dtype), state.n.astype(dtype))
+
+    # inner pass: r_t = q_t^T P_t, s_t = q_t^T m_t (value-augmented trick to
+    # share one pass: append a ones column to V)
+    ones = jnp.ones(v.shape[:-1] + (1,), dtype)
+    v_aug = jnp.concatenate([v.astype(dtype), ones], axis=-1)
+    y, inner1 = linattn_chunkwise(q, k, v_aug, gamma, chunk=chunk, state=LinAttnState(
+        P=jnp.concatenate([inner0.P, inner0.m[..., None]], -1), m=inner0.m))
+    r, s = y[..., :dv], y[..., dv:]
+    # outer pass on values r (and s for the denominator)
+    y2, outer1 = linattn_chunkwise(
+        q, k, jnp.concatenate([r, s], -1), gamma, chunk=chunk,
+        state=LinAttnState(
+            P=jnp.concatenate([outer0.P, outer0.m[..., None]], -1),
+            m=inner0.m,
+        ),
+    )
+    num, den = y2[..., :dv], y2[..., dv]
+    o = num / (den[..., None] + eps) if normalize else num
+    # final state: R must accumulate undecayed sum k q^T
+    R = state.R.astype(dtype) + jnp.einsum(
+        "...td,...te->...de", k.astype(dtype), q.astype(dtype)
+    )
+    Pf = inner1.P[..., :dv]
+    mf = inner1.P[..., dv]
+    Ef = outer1.P[..., :dv]
+    nf = outer1.P[..., dv]
+    return o.astype(v.dtype), AHLAState(R, Pf, mf, Ef, nf)
+
+
+def ahla(
+    q, k, v, gamma=None, *, impl: str = "chunkwise", chunk: int = 64,
+    normalize: bool = False, eps: float = 1e-6,
+    state: Optional[AHLAState] = None,
+):
+    if impl == "chunkwise":
+        return ahla_chunkwise(
+            q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
+            state=state,
+        )
+    if impl == "scan":
+        return ahla_scan(
+            q, k, v, gamma, normalize=normalize, eps=eps, state=state
+        )
+    if impl == "serial":
+        return ahla_serial(
+            q, k, v, gamma, normalize=normalize, eps=eps, state=state
+        )
+    if impl == "naive":
+        return ahla_naive(q, k, v, gamma, normalize=normalize, eps=eps), None
+    raise ValueError(impl)

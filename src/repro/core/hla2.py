@@ -1,0 +1,583 @@
+"""Second-order Higher-order Linear Attention (HLA2).
+
+Implements the paper's Section 3 / 4 / 5 in four exactly-equivalent forms:
+
+* ``hla2_naive``     — view (B): materializes the n x n masked second-order
+                       weights.  O(n^2).  Test oracle only.
+* ``hla2_serial``    — view (A): the streaming recurrence of Theorem 3.1 /
+                       Section 4.3 (``lax.scan`` over tokens).  Decode path.
+* ``hla2_scan``      — view (C), paper-faithful: token-level associative
+                       (Blelloch) scan with the masked semidirect-product
+                       monoid of Eq. (4.1) (decay-aware variant included).
+* ``hla2_chunkwise`` — view (C), TPU-adapted: intra-chunk masked *matmul*
+                       form + sequential inter-chunk carry.  This is the
+                       beyond-paper reformulation described in DESIGN.md §2;
+                       it computes bit-identical math on MXU-aligned tiles.
+
+Decay erratum (documented in DESIGN.md §7): the paper's printed decay-aware
+masked monoid (Section 4.2) composes ``G`` as ``rho_B G_A + ... + S_B (rho_B
+C_A)`` which is *not associative* (direct 3-segment expansion disagrees by a
+factor ``rho``).  The consistent algebra — the one for which
+``q_t^T (S_t C_t - G_t)`` equals the strictly-causal part of the doubly
+decayed product — decays the cross summaries at rate ``gamma**2``:
+
+    S_t = g S_{t-1} + k_t k_t^T          C_t = g C_{t-1} + q_t v_t^T
+    m_t = g m_{t-1} + q_t
+    G_t = g^2 G_{t-1} + g * k_t (k_t^T C_{t-1})
+    h_t = g^2 h_{t-1} + g * k_t (k_t^T m_{t-1})
+
+with segment composition (A then B, attenuation rho = gamma^len):
+
+    S = rB S_A + S_B            C = rB C_A + C_B        m = rB m_A + m_B
+    G = rB^2 G_A + G_B + rB S_B C_A
+    h = rB^2 h_A + h_B + rB S_B m_A
+    rho = rA rB
+
+At ``gamma == 1`` this is exactly Eq. (4.1).  The masked output weight it
+realizes is
+
+    num_t = sum_{i<=j<=t} g^{(t-i)+(t-j)} (q_t.k_i)(k_i.q_j) v_j
+
+i.e. every pairwise interaction decays toward the *current* horizon t
+(retention-style), which is the unique streaming-homogeneous choice.
+
+All functions take ``q, k: (..., n, d)`` and ``v: (..., n, dv)`` with any
+leading batch dims, and a ``gamma`` broadcastable to the leading dims
+(per-head decay).  State math runs in fp32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class HLA2State(NamedTuple):
+    """Constant-size per-head state tuple (Fig. 1(A))."""
+
+    S: jax.Array  # (..., d, d)   prefix key second moment
+    C: jax.Array  # (..., d, dv)  query-value accumulator
+    m: jax.Array  # (..., d)      query mass
+    G: jax.Array  # (..., d, dv)  masked cross summary (Thm 3.1)
+    h: jax.Array  # (..., d)      masked cross summary (Thm 3.1)
+
+
+def hla2_init_state(batch_shape, d: int, dv: int, dtype=jnp.float32) -> HLA2State:
+    z = functools.partial(jnp.zeros, dtype=dtype)
+    return HLA2State(
+        S=z(batch_shape + (d, d)),
+        C=z(batch_shape + (d, dv)),
+        m=z(batch_shape + (d,)),
+        G=z(batch_shape + (d, dv)),
+        h=z(batch_shape + (d,)),
+    )
+
+
+def _gamma_arr(gamma, batch_shape, dtype):
+    if gamma is None:
+        return jnp.ones(batch_shape, dtype)
+    g = jnp.asarray(gamma, dtype)
+    return jnp.broadcast_to(g, batch_shape)
+
+
+def _compute_dtype(x: jax.Array):
+    """State/accumulation dtype: at least fp32, fp64 if inputs are fp64."""
+    return jnp.promote_types(x.dtype, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# View (A): streaming recurrence — Theorem 3.1 online updates + Section 4.3.
+# --------------------------------------------------------------------------
+
+
+def hla2_step(
+    state: HLA2State,
+    q_t: jax.Array,  # (..., d)
+    k_t: jax.Array,  # (..., d)
+    v_t: jax.Array,  # (..., dv)
+    gamma=None,
+    *,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    lam: float = 0.0,
+):
+    """One token of the masked streaming recurrence.  Returns (state, o_t).
+
+    Per-token cost O(d^2 + d dv); no n x n objects (Theorem 3.1).
+    """
+    dtype = state.S.dtype
+    q_t = q_t.astype(dtype)
+    k_t = k_t.astype(dtype)
+    v_t = v_t.astype(dtype)
+    g = _gamma_arr(gamma, q_t.shape[:-1], dtype)  # (batch,)
+    gv = g[..., None]  # for (..., d) vectors
+    gm = g[..., None, None]  # for (..., d, d') matrices
+
+    # Cross summaries first: they consume the *previous* C, m (strict
+    # causality), with the gamma**2 / gamma corrected decay (see module doc).
+    kC = jnp.einsum("...d,...de->...e", k_t, state.C)  # k^T C_{t-1}
+    km = jnp.einsum("...d,...d->...", k_t, state.m)  # k^T m_{t-1}
+    G = gm**2 * state.G + gm * k_t[..., :, None] * kC[..., None, :]
+    h = gv**2 * state.h + gv * k_t * km[..., None]
+
+    S = gm * state.S + k_t[..., :, None] * k_t[..., None, :]
+    C = gm * state.C + q_t[..., :, None] * v_t[..., None, :]
+    m = gv * state.m + q_t
+
+    u = jnp.einsum("...d,...de->...e", q_t, S)  # q^T S   (O(d^2) matvec)
+    num = jnp.einsum("...d,...de->...e", u, C) - jnp.einsum(
+        "...d,...de->...e", q_t, G
+    )
+    if lam:
+        num = num + lam * jnp.einsum("...d,...de->...e", q_t, C)
+    o = num
+    if normalize:
+        den = jnp.einsum("...d,...d->...", u, m) - jnp.einsum(
+            "...d,...d->...", q_t, h
+        )
+        if lam:
+            den = den + lam * jnp.einsum("...d,...d->...", q_t, m)
+        o = num / (den[..., None] + eps)
+    return HLA2State(S, C, m, G, h), o
+
+
+def hla2_serial(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    gamma=None,
+    *,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    lam: float = 0.0,
+    state: Optional[HLA2State] = None,
+):
+    """Serial recurrence over the whole sequence (view A).  Returns (o, state)."""
+    batch_shape = q.shape[:-2]
+    n, d = q.shape[-2], q.shape[-1]
+    dv = v.shape[-1]
+    if state is None:
+        state = hla2_init_state(batch_shape, d, dv, _compute_dtype(q))
+
+    def body(st, qkv):
+        q_t, k_t, v_t = qkv
+        st, o_t = hla2_step(
+            st, q_t, k_t, v_t, gamma, normalize=normalize, eps=eps, lam=lam
+        )
+        return st, o_t
+
+    # scan over time: move time to axis 0
+    qs = jnp.moveaxis(q, -2, 0)
+    ks = jnp.moveaxis(k, -2, 0)
+    vs = jnp.moveaxis(v, -2, 0)
+    state, os_ = jax.lax.scan(body, state, (qs, ks, vs))
+    return jnp.moveaxis(os_, 0, -2).astype(v.dtype), state
+
+
+# --------------------------------------------------------------------------
+# View (B): O(n^2) oracle.
+# --------------------------------------------------------------------------
+
+
+def hla2_naive(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    gamma=None,
+    *,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    lam: float = 0.0,
+):
+    """Materialized masked second-order attention (Section 3.1), test oracle.
+
+    gamma == None:  o_t = row_t[ ((W W^T) . L) V ],  W = L . (Q K^T).
+    gamma != None:  num_t = sum_{i<=j<=t} g^{(t-i)+(t-j)} (q_t.k_i)(k_i.q_j) v_j
+    (the streaming-homogeneous decayed form; see module docstring).
+    """
+    dtype = _compute_dtype(q)
+    q32, k32, v32 = q.astype(dtype), k.astype(dtype), v.astype(dtype)
+    n = q.shape[-2]
+    batch_shape = q.shape[:-2]
+    t_idx = jnp.arange(n)
+    L = (t_idx[:, None] >= t_idx[None, :]).astype(dtype)  # lower incl diag
+    g = _gamma_arr(gamma, batch_shape, dtype)[..., None, None]
+
+    qk = jnp.einsum("...td,...jd->...tj", q32, k32)  # Q K^T
+    if gamma is None:
+        W = qk * L
+        T2 = jnp.einsum("...ti,...ji->...tj", W, W) * L
+        num = jnp.einsum("...tj,...je->...te", T2, v32)
+        den = jnp.sum(T2, axis=-1)
+    else:
+        # weight(t,j) = sum_{i<=j} g^{(t-i)+(t-j)} (q_t.k_i)(k_i.q_j), j<=t
+        kq = jnp.einsum("...id,...jd->...ij", k32, q32)  # k_i . q_j
+        # inner(t,j) = sum_{i<=j} g^{t-i} qk[t,i] * kq[i,j]
+        Ui = (t_idx[:, None] <= t_idx[None, :]).astype(dtype)  # i<=j
+        pow_t_i = jnp.power(g, (t_idx[:, None] - t_idx[None, :]).astype(dtype))
+        A = qk * L * pow_t_i  # g^{t-i} masked
+        B = kq * Ui
+        inner = jnp.einsum("...ti,...ij->...tj", A, B)
+        pow_t_j = jnp.power(g, (t_idx[:, None] - t_idx[None, :]).astype(dtype))
+        T2 = inner * L * pow_t_j
+        num = jnp.einsum("...tj,...je->...te", T2, v32)
+        den = jnp.sum(T2, axis=-1)
+    if lam:
+        # ridge: + lam * first-order (q,q,v) masked linear attention, decayed
+        if gamma is None:
+            Wqq = jnp.einsum("...td,...jd->...tj", q32, q32) * L
+        else:
+            pw = jnp.power(g, (t_idx[:, None] - t_idx[None, :]).astype(dtype))
+            Wqq = jnp.einsum("...td,...jd->...tj", q32, q32) * L * pw
+        num = num + lam * jnp.einsum("...tj,...je->...te", Wqq, v32)
+        den = den + lam * jnp.sum(Wqq, axis=-1)
+    if normalize:
+        return (num / (den[..., None] + eps)).astype(v.dtype)
+    return num.astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# View (C) paper-faithful: token-level associative scan, Eq. (4.1) monoid.
+# --------------------------------------------------------------------------
+
+
+def masked_op(a: HLA2State, b: HLA2State) -> HLA2State:
+    """Undecayed masked semidirect product, Eq. (4.1).  A then B."""
+    return HLA2State(
+        S=a.S + b.S,
+        C=a.C + b.C,
+        m=a.m + b.m,
+        G=a.G + b.G + jnp.einsum("...ij,...je->...ie", b.S, a.C),
+        h=a.h + b.h + jnp.einsum("...ij,...j->...i", b.S, a.m),
+    )
+
+
+class HLA2DecayState(NamedTuple):
+    S: jax.Array
+    C: jax.Array
+    m: jax.Array
+    G: jax.Array
+    h: jax.Array
+    rho: jax.Array  # (...,) segment attenuation gamma^len
+
+
+def masked_op_decay(a: HLA2DecayState, b: HLA2DecayState) -> HLA2DecayState:
+    """Corrected decay-aware masked monoid (associative; see module doc)."""
+    rB = b.rho[..., None, None]
+    rBv = b.rho[..., None]
+    return HLA2DecayState(
+        S=rB * a.S + b.S,
+        C=rB * a.C + b.C,
+        m=rBv * a.m + b.m,
+        G=rB**2 * a.G + b.G + rB * jnp.einsum("...ij,...je->...ie", b.S, a.C),
+        h=rBv**2 * a.h + b.h + rBv * jnp.einsum("...ij,...j->...i", b.S, a.m),
+        rho=a.rho * b.rho,
+    )
+
+
+def masked_op_decay_paper(a: HLA2DecayState, b: HLA2DecayState) -> HLA2DecayState:
+    """The paper's printed decay-aware masked concatenation (Section 4.2).
+
+    Kept verbatim for the property test demonstrating it is NOT associative
+    (DESIGN.md §7 erratum).  Do not use for computation.
+    """
+    rB = b.rho[..., None, None]
+    rBv = b.rho[..., None]
+    return HLA2DecayState(
+        S=rB * a.S + b.S,
+        C=rB * a.C + b.C,
+        m=rBv * a.m + b.m,
+        G=rB * a.G + b.G + jnp.einsum("...ij,...je->...ie", b.S, rB * a.C),
+        h=rBv * a.h + b.h + jnp.einsum("...ij,...j->...i", b.S, rBv * a.m),
+        rho=a.rho * b.rho,
+    )
+
+
+def hla2_scan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    gamma=None,
+    *,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    lam: float = 0.0,
+    state: Optional[HLA2State] = None,
+):
+    """Token-level Blelloch scan (paper view (C), Theorem 4.1).
+
+    Builds single-token segments and runs ``jax.lax.associative_scan`` with
+    the masked monoid; inclusive per-token states then produce outputs via
+    Theorem 3.1.  This is the paper-faithful baseline path: it materializes
+    (n, ..., d, d) prefix tensors, trading memory for span O(log n).
+    """
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    n, d = q.shape[-2], q.shape[-1]
+    dv = v.shape[-1]
+    q32 = jnp.moveaxis(q.astype(dtype), -2, 0)  # (n, ..., d)
+    k32 = jnp.moveaxis(k.astype(dtype), -2, 0)
+    v32 = jnp.moveaxis(v.astype(dtype), -2, 0)
+
+    dS = k32[..., :, None] * k32[..., None, :]  # (n, ..., d, d)
+    dC = q32[..., :, None] * v32[..., None, :]
+    dm = q32
+    zG = jnp.zeros((n,) + batch_shape + (d, dv), dtype)
+    zh = jnp.zeros((n,) + batch_shape + (d,), dtype)
+
+    if gamma is None:
+        elems = HLA2State(dS, dC, dm, zG, zh)
+        inc = jax.lax.associative_scan(masked_op, elems, axis=0)
+        S, C, m, G, h = inc
+    else:
+        g = jnp.broadcast_to(
+            _gamma_arr(gamma, batch_shape, dtype)[None], (n,) + batch_shape
+        )
+        elems = HLA2DecayState(dS, dC, dm, zG, zh, g)
+        inc = jax.lax.associative_scan(masked_op_decay, elems, axis=0)
+        S, C, m, G, h = inc.S, inc.C, inc.m, inc.G, inc.h
+
+    if state is not None:
+        # fold a carry-in state (prefix from previous segment) into every
+        # inclusive state via one extra monoid application.
+        rho_seg = (
+            jnp.cumprod(
+                jnp.broadcast_to(
+                    _gamma_arr(gamma, batch_shape, dtype)[None],
+                    (n,) + batch_shape,
+                ),
+                axis=0,
+            )
+            if gamma is not None
+            else jnp.ones((n,) + batch_shape, dtype)
+        )
+        a = HLA2DecayState(
+            state.S, state.C, state.m, state.G, state.h,
+            jnp.ones(batch_shape, dtype),
+        )
+        b = HLA2DecayState(S, C, m, G, h, rho_seg)
+        merged = masked_op_decay(a, b)
+        S, C, m, G, h = merged.S, merged.C, merged.m, merged.G, merged.h
+
+    u = jnp.einsum("n...d,n...de->n...e", q32, S)
+    num = jnp.einsum("n...e,n...ef->n...f", u, C) - jnp.einsum(
+        "n...d,n...df->n...f", q32, G
+    )
+    if lam:
+        num = num + lam * jnp.einsum("n...d,n...df->n...f", q32, C)
+    o = num
+    if normalize:
+        den = jnp.einsum("n...e,n...e->n...", u, m) - jnp.einsum(
+            "n...d,n...d->n...", q32, h
+        )
+        if lam:
+            den = den + lam * jnp.einsum("n...d,n...d->n...", q32, m)
+        o = num / (den[..., None] + eps)
+    out = jnp.moveaxis(o, 0, -2).astype(v.dtype)
+    final = HLA2State(S[-1], C[-1], m[-1], G[-1], h[-1])
+    return out, final
+
+
+# --------------------------------------------------------------------------
+# View (C) TPU-adapted: chunkwise masked-matmul form (DESIGN.md §2).
+# --------------------------------------------------------------------------
+
+
+def _decay_matrices(n: int, g: jax.Array, dtype):
+    """L_gamma[t, j] = g^(t-j) for j <= t else 0, and power vectors.
+
+    ``g`` has shape ``batch_shape``; the result broadcasts as
+    (..., n, n) / (..., n).
+    """
+    t_idx = jnp.arange(n)
+    diff = (t_idx[:, None] - t_idx[None, :]).astype(dtype)
+    mask = t_idx[:, None] >= t_idx[None, :]
+    gb = g[..., None, None]
+    Lg = jnp.where(mask, jnp.power(jnp.maximum(gb, 1e-30), diff), 0.0)
+    pow_t = jnp.power(g[..., None], (t_idx + 1).astype(dtype))  # g^t, t=1..n
+    return Lg, pow_t
+
+
+def hla2_chunkwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    gamma=None,
+    *,
+    chunk: int = 64,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    lam: float = 0.0,
+    state: Optional[HLA2State] = None,
+):
+    """Chunkwise masked second-order HLA — intra-chunk matmuls, carried state.
+
+    For local tokens 1..w with carry (S0, C0, m0, G0, h0) and D0 = S0 C0 - G0:
+
+        num_t = g^{2t} q_t D0                              (T1: Q @ D0)
+              + g^t   row_t[(Q S0 Q^T . Lg) V]             (T2)
+              + row_t[((A B) . Lg) V]                      (T3, intra)
+        A = (Q K^T) . Lg,  B = (K Q^T) . U  (U = upper incl diag)
+
+    with all masked matmuls MXU-shaped (w x w / w x d).  Identical math to
+    the serial recurrence (tested to fp32 tolerance; exact at gamma=1).
+    """
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    n, d = q.shape[-2], q.shape[-1]
+    dv = v.shape[-1]
+    w = min(chunk, n)
+    if n % w != 0:
+        pad = w - n % w
+        zq = jnp.zeros(batch_shape + (pad, d), q.dtype)
+        zv = jnp.zeros(batch_shape + (pad, dv), v.dtype)
+        out, st = hla2_chunkwise(
+            jnp.concatenate([q, zq], -2),
+            jnp.concatenate([k, zq], -2),
+            jnp.concatenate([v, zv], -2),
+            gamma,
+            chunk=w,
+            normalize=normalize,
+            eps=eps,
+            lam=lam,
+            state=state,
+        )
+        # zero padding tokens only *decay* the state (their deltas vanish);
+        # undo the spurious gamma^pad (gamma^2pad on G, h) attenuation.
+        if gamma is not None:
+            gpad = jnp.power(
+                _gamma_arr(gamma, batch_shape, _compute_dtype(q)), float(pad)
+            )
+            inv = 1.0 / gpad
+            st = HLA2State(
+                S=st.S * inv[..., None, None],
+                C=st.C * inv[..., None, None],
+                m=st.m * inv[..., None],
+                G=st.G * (inv**2)[..., None, None],
+                h=st.h * (inv**2)[..., None],
+            )
+        return out[..., :n, :], st
+    nc = n // w
+
+    g = _gamma_arr(gamma, batch_shape, dtype)
+    has_decay = gamma is not None
+    Lg, pow_t = _decay_matrices(w, g if has_decay else jnp.ones_like(g), dtype)
+    t_idx = jnp.arange(w)
+    U = (t_idx[:, None] <= t_idx[None, :]).astype(dtype)  # i <= j
+    Ls = (t_idx[:, None] > t_idx[None, :]).astype(dtype)  # strictly lower
+    # g^(w-i), i = 1..w  (used for chunk-summary weighting)
+    pow_rev = jnp.power(g[..., None], (w - t_idx - 1).astype(dtype))
+    rho_w = jnp.power(g, float(w))  # gamma^w
+
+    if state is None:
+        state = hla2_init_state(batch_shape, d, dv)
+    st0 = HLA2State(*(x.astype(dtype) for x in state))
+
+    # reshape to chunks: (..., nc, w, d) -> scan over nc
+    qc = jnp.moveaxis(q.astype(dtype).reshape(batch_shape + (nc, w, d)), -3, 0)
+    kc = jnp.moveaxis(k.astype(dtype).reshape(batch_shape + (nc, w, d)), -3, 0)
+    vc = jnp.moveaxis(v.astype(dtype).reshape(batch_shape + (nc, w, dv)), -3, 0)
+
+    def chunk_body(carry: HLA2State, qkv):
+        Q, K, V = qkv  # (..., w, d/dv)
+        S0, C0, m0, G0, h0 = carry
+
+        A = jnp.einsum("...td,...id->...ti", Q, K) * Lg  # (QK^T).Lg
+        Bm = jnp.einsum("...id,...jd->...ij", K, Q) * U  # (KQ^T).U
+        M3 = jnp.einsum("...ti,...ij->...tj", A, Bm) * Lg
+        ones = jnp.ones(batch_shape + (w, 1), dtype)
+
+        # T1: carry-only term, row-scaled by g^{2t}
+        D0 = jnp.einsum("...ij,...je->...ie", S0, C0) - G0
+        T1 = (pow_t**2)[..., None] * jnp.einsum("...td,...de->...te", Q, D0)
+        # T2: carry metric x local pairs
+        QS0Q = jnp.einsum("...td,...de,...je->...tj", Q, S0, Q) * Lg
+        T2 = pow_t[..., None] * jnp.einsum("...tj,...je->...te", QS0Q, V)
+        T3 = jnp.einsum("...tj,...je->...te", M3, V)
+        num = T1 + T2 + T3
+
+        if lam:
+            Wqq = jnp.einsum("...td,...jd->...tj", Q, Q) * Lg
+            qC0 = jnp.einsum("...td,...de->...te", Q, C0)
+            num = num + lam * (
+                pow_t[..., None] * qC0
+                + jnp.einsum("...tj,...je->...te", Wqq, V)
+            )
+
+        if normalize:
+            d0v = jnp.einsum("...ij,...j->...i", S0, m0) - h0
+            den = (
+                (pow_t**2) * jnp.einsum("...td,...d->...t", Q, d0v)
+                + pow_t * jnp.einsum("...tj->...t", QS0Q)
+                + jnp.sum(M3, -1)
+            )
+            if lam:
+                qm0 = jnp.einsum("...td,...d->...t", Q, m0)
+                den = den + lam * (pow_t * qm0 + jnp.sum(Wqq, -1))
+            o = num / (den[..., None] + eps)
+        else:
+            o = num
+
+        # ---- chunk summary & carry update (monoid with B = whole chunk) ----
+        Kg = pow_rev[..., None] * K  # g^{w-t} k_t
+        Vg = pow_rev[..., None] * V
+        Sw = jnp.einsum("...ti,...tj->...ij", Kg, K)  # sum g^{w-t} k k^T
+        Cw = jnp.einsum("...ti,...te->...ie", pow_rev[..., None] * Q, V)
+        mw = jnp.einsum("...ti->...i", pow_rev[..., None] * Q)
+        N = jnp.einsum("...td,...jd->...tj", K, Q) * Ls  # (KQ^T).Lstrict
+        NVg = jnp.einsum("...tj,...je->...te", N, Vg)  # sum_{j<t}(k_t.q_j)g^{w-j}v_j
+        Gw = jnp.einsum("...td,...te->...de", Kg, NVg)
+        Nmg = jnp.einsum("...tj,...j->...t", N, pow_rev)
+        hw = jnp.einsum("...td,...t->...d", Kg, Nmg)
+
+        rw = rho_w[..., None, None]
+        rwv = rho_w[..., None]
+        new = HLA2State(
+            S=rw * S0 + Sw,
+            C=rw * C0 + Cw,
+            m=rwv * m0 + mw,
+            G=rw**2 * G0 + Gw + rw * jnp.einsum("...ij,...je->...ie", Sw, C0),
+            h=rwv**2 * h0 + hw + rwv * jnp.einsum("...ij,...j->...i", Sw, m0),
+        )
+        return new, o
+
+    final, outs = jax.lax.scan(chunk_body, st0, (qc, kc, vc))
+    out = jnp.moveaxis(outs, 0, -3).reshape(batch_shape + (n, dv))
+    return out.astype(v.dtype), final
+
+
+def hla2(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    gamma=None,
+    *,
+    impl: str = "chunkwise",
+    chunk: int = 64,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    lam: float = 0.0,
+    state: Optional[HLA2State] = None,
+):
+    """Dispatch front-end.  Returns (outputs, final_state)."""
+    if impl == "chunkwise":
+        return hla2_chunkwise(
+            q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
+            lam=lam, state=state,
+        )
+    if impl == "scan":
+        return hla2_scan(
+            q, k, v, gamma, normalize=normalize, eps=eps, lam=lam, state=state
+        )
+    if impl == "serial":
+        return hla2_serial(
+            q, k, v, gamma, normalize=normalize, eps=eps, lam=lam, state=state
+        )
+    if impl == "naive":
+        return hla2_naive(
+            q, k, v, gamma, normalize=normalize, eps=eps, lam=lam
+        ), None
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,561 @@
+"""Third-order Linear Attention — paper Section 7, plus a corrected variant.
+
+Paper-faithful operators
+------------------------
+* ``hla3_paper_serial``  — Algorithm 3 verbatim (state S^K, S^Q, P, m,
+  G^(1..3), h^(1..3); decay as printed).
+* ``hla3_paper_scan``    — Algorithm 4 / Theorem 7.2: associative scan under
+  the composition (7.6)-(7.7) with the segment maps M^KQP / M^KQm
+  *materialized* as dense 4-/3-tensors (O(d^3 dv) per element — the cost the
+  paper quotes; test-scale d only).
+* ``hla3_paper_chunkwise`` — production path: sequential inter-chunk carry
+  of (S^K, S^Q, P, m, F, eta); intra-chunk outputs and the ⊗3 cross terms
+  evaluated as masked matmuls via the scalar identities
+  ``D^K Z D^P = (k^T Z k) k v^T`` and ``D^K D^Q = (k.q) k q^T`` — the maps
+  are applied to the carry, never materialized (gamma = 1, as Alg. 4).
+
+Erratum (2) — Theorem 7.1 (documented in DESIGN.md §7)
+------------------------------------------------------
+The paper claims Algorithm 3 computes ``row_t[((W W^T) ⊙ L)(W V)]`` with
+``W = L ⊙ (QK^T)``.  Region analysis of the inclusion–exclusion shows
+otherwise: with triples (i = inner key, u = middle query, j = value index),
+the target causal region is ``{i <= u, j <= u, u <= t}`` (u is a *weak*
+max), while ``S S^Q P - G1 - G2 - G3`` removes the three disjoint regions
+where one index is the *strict unique* max, leaving the "no strict unique
+max" region.  E.g. the causal triple (i,u,j) = (1,5,3) is wrongly
+subtracted by G2.  Both operators are strictly causal and O(d^2 + d dv)
+streaming; they simply differ.  We implement the paper's operator verbatim
+(it is self-consistent: Alg 3 == Eq (7.5) == Alg 4, all tested) and
+additionally provide the operator matching the stated target:
+
+* ``hla3_exact``: note ``(W V)_u = r_u`` is first-order linear attention and
+  ``((W W^T) ⊙ L)_{t,u} = q_t^T S_u^K q_u`` is exactly the masked HLA2
+  weight, so the exact third-order operator factors as
+
+      HLA3_exact(Q, K, V) = HLA2_masked(Q, K, values = LinAttn(Q, K, V))
+
+  — implemented as two chunked passes, with streaming/decode state
+  (LinAttnState, HLA2State) and decay applied per pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .hla2 import (
+    HLA2State,
+    _compute_dtype,
+    _decay_matrices,
+    _gamma_arr,
+    hla2_chunkwise,
+    hla2_init_state,
+    hla2_naive,
+    hla2_step,
+)
+from .linear_attn import (
+    LinAttnState,
+    linattn_chunkwise,
+    linattn_init_state,
+    linattn_naive,
+    linattn_step,
+)
+
+# ===========================================================================
+# Paper-faithful third order (Algorithm 3 / 4)
+# ===========================================================================
+
+
+class HLA3PaperState(NamedTuple):
+    SK: jax.Array  # (..., d, d)
+    SQ: jax.Array  # (..., d, d)
+    P: jax.Array  # (..., d, dv)
+    m: jax.Array  # (..., d)
+    G1: jax.Array  # (..., d, dv)
+    G2: jax.Array  # (..., d, dv)
+    G3: jax.Array  # (..., d, dv)
+    h1: jax.Array  # (..., d)
+    h2: jax.Array  # (..., d)
+    h3: jax.Array  # (..., d)
+
+
+def hla3_paper_init_state(batch_shape, d, dv, dtype=jnp.float32):
+    z = functools.partial(jnp.zeros, dtype=dtype)
+    return HLA3PaperState(
+        SK=z(batch_shape + (d, d)),
+        SQ=z(batch_shape + (d, d)),
+        P=z(batch_shape + (d, dv)),
+        m=z(batch_shape + (d,)),
+        G1=z(batch_shape + (d, dv)),
+        G2=z(batch_shape + (d, dv)),
+        G3=z(batch_shape + (d, dv)),
+        h1=z(batch_shape + (d,)),
+        h2=z(batch_shape + (d,)),
+        h3=z(batch_shape + (d,)),
+    )
+
+
+def hla3_paper_step(
+    state: HLA3PaperState, q_t, k_t, v_t, gamma=None,
+    *, normalize: bool = False, eps: float = 1e-6,
+):
+    """Algorithm 3, one token, decay placed exactly as printed."""
+    dtype = state.SK.dtype
+    q_t, k_t, v_t = q_t.astype(dtype), k_t.astype(dtype), v_t.astype(dtype)
+    g = _gamma_arr(gamma, q_t.shape[:-1], dtype)
+    gv, gm = g[..., None], g[..., None, None]
+
+    SKp, SQp, Pp, mp = state.SK, state.SQ, state.P, state.m
+
+    SK = gm * SKp + k_t[..., :, None] * k_t[..., None, :]
+    SQ = gm * SQp + q_t[..., :, None] * q_t[..., None, :]
+    P = gm * Pp + k_t[..., :, None] * v_t[..., None, :]
+    m = gv * mp + k_t
+
+    u1 = jnp.einsum("...ij,...j->...i", SQp, k_t)  # S^Q_prev k_t
+    G1 = gm * state.G1 + k_t[..., :, None] * jnp.einsum(
+        "...d,...de->...e", u1, Pp
+    )[..., None, :]
+    h1 = gv * state.h1 + k_t * jnp.einsum("...d,...d->...", u1, mp)[..., None]
+
+    a2 = jnp.einsum("...ij,...j->...i", SKp, q_t)  # S^K_prev q_t
+    G2 = gm * state.G2 + a2[..., :, None] * jnp.einsum(
+        "...d,...de->...e", q_t, Pp
+    )[..., None, :]
+    h2 = gv * state.h2 + a2 * jnp.einsum("...d,...d->...", q_t, mp)[..., None]
+
+    u3 = jnp.einsum("...ij,...j->...i", SQp, k_t)
+    a3 = jnp.einsum("...ij,...j->...i", SKp, u3)
+    G3 = gm * state.G3 + a3[..., :, None] * v_t[..., None, :]
+    h3 = gv * state.h3 + a3
+
+    y = jnp.einsum("...ij,...j->...i", SK, q_t)
+    z = jnp.einsum("...ij,...j->...i", SQ, y)
+    termA = jnp.einsum("...d,...de->...e", z, P)
+    o = (
+        termA
+        - jnp.einsum("...d,...de->...e", q_t, G1)
+        - jnp.einsum("...d,...de->...e", q_t, G2)
+        - jnp.einsum("...d,...de->...e", q_t, G3)
+    )
+    if normalize:
+        denvec = (
+            jnp.einsum("...ij,...j->...i", SK, jnp.einsum("...ij,...j->...i", SQ, m))
+            - h1 - h2 - h3
+        )
+        den = jnp.einsum("...d,...d->...", q_t, denvec)
+        o = o / (den[..., None] + eps)
+    new = HLA3PaperState(SK, SQ, P, m, G1, G2, G3, h1, h2, h3)
+    return new, o
+
+
+def hla3_paper_serial(
+    q, k, v, gamma=None, *, normalize: bool = False, eps: float = 1e-6,
+    state: Optional[HLA3PaperState] = None,
+):
+    batch_shape = q.shape[:-2]
+    d, dv = q.shape[-1], v.shape[-1]
+    if state is None:
+        state = hla3_paper_init_state(batch_shape, d, dv, _compute_dtype(q))
+
+    def body(st, qkv):
+        st, o = hla3_paper_step(st, *qkv, gamma, normalize=normalize, eps=eps)
+        return st, o
+
+    qs, ks, vs = (jnp.moveaxis(x, -2, 0) for x in (q, k, v))
+    state, os_ = jax.lax.scan(body, state, (qs, ks, vs))
+    return jnp.moveaxis(os_, 0, -2).astype(v.dtype), state
+
+
+def hla3_paper_naive(
+    q, k, v, *, normalize: bool = False, eps: float = 1e-6
+):
+    """Region oracle for the paper's operator (gamma = 1).
+
+    num_t = sum over triples (i, u, j) <= t with *no strict unique max*
+    of (q_t.k_i)(q_u.k_i)(q_u.k_j) v_j   — see module docstring.
+    """
+    dtype = _compute_dtype(q)
+    q32, k32, v32 = q.astype(dtype), k.astype(dtype), v.astype(dtype)
+    n = q.shape[-2]
+    idx = jnp.arange(n)
+    qk = jnp.einsum("...td,...id->...ti", q32, k32)  # (q_t . k_i)
+    # triple weight tensor T[u, i, j] masked per region, contracted with
+    # q_t via qk[t, i]; keep n small in tests (O(n^3) memory).
+    i_, u_, j_ = idx[None, :, None], idx[:, None, None], idx[None, None, :]
+    i_strict_max = (i_ > u_) & (i_ > j_)
+    u_strict_max = (u_ > i_) & (u_ > j_)
+    j_strict_max = (j_ > i_) & (j_ > u_)
+    keep = ~(i_strict_max | u_strict_max | j_strict_max)  # (u, i, j)
+    keep = keep.astype(dtype)
+    quk = jnp.einsum("...ud,...id->...ui", q32, k32)  # (q_u . k_i)
+    quj = jnp.einsum("...ud,...jd->...uj", q32, k32)  # (q_u . k_j)
+    # core[u, i, j] = (q_u.k_i)(q_u.k_j) * keep
+    core = quk[..., :, :, None] * quj[..., :, None, :] * keep
+    # restrict u, i, j <= t when contracting with q_t: build per-t via mask
+    # num[t] = sum_{u,i,j <= t} qk[t,i] core[u,i,j] v[j]
+    le = (idx[:, None] <= idx[None, :]).astype(dtype)  # [a, t] = a<=t
+    # sum over i with i<=t: weight qk[t,i]*le[i,t]
+    w_ti = qk * le.T  # (t, i) masked i<=t
+    tmp = jnp.einsum("...ti,...uij->...tuj", w_ti, core)
+    tmp = tmp * le.T[..., None]  # mask u<=t  -> le[u,t] => le.T[t,u]
+    Tmat = jnp.einsum("...tuj->...tj", tmp)
+    Tmat = Tmat * le.T  # mask j<=t
+    num = jnp.einsum("...tj,...je->...te", Tmat, v32)
+    if normalize:
+        den = jnp.sum(Tmat, -1)
+        num = num / (den[..., None] + eps)
+    return num.astype(v.dtype)
+
+
+# ----------------------- Algorithm 4: associative scan ---------------------
+
+
+class HLA3ScanState(NamedTuple):
+    """Paper Eq. (7.6)-(7.7) state with materialized segment maps.
+
+    W4[a,b,c,e] = sum_t k_a k_b k_c v_e  represents M^KQP;
+    W3[a,b,c]   = sum_t k_a k_b k_c      represents M^KQm.
+    """
+
+    SK: jax.Array
+    SQ: jax.Array
+    P: jax.Array
+    m: jax.Array
+    F: jax.Array  # (..., d, dv) corrected state
+    eta: jax.Array  # (..., d)
+    RQP: jax.Array  # (..., d, dv)
+    rQm: jax.Array  # (..., d)
+    UKQ: jax.Array  # (..., d, d)
+    W4: jax.Array  # (..., d, d, d, dv)
+    W3: jax.Array  # (..., d, d, d)
+
+
+def hla3_op(a: HLA3ScanState, b: HLA3ScanState) -> HLA3ScanState:
+    """⊗3 — Eqs. (7.6)–(7.7)."""
+    MB_SQ = jnp.einsum("...abce,...bc->...ae", b.W4, a.SQ)
+    MBm_SQ = jnp.einsum("...abc,...bc->...a", b.W3, a.SQ)
+    F = (
+        a.F + b.F
+        + jnp.einsum("...ij,...je->...ie", a.SK, b.RQP)
+        + MB_SQ
+        + jnp.einsum("...ij,...je->...ie", b.UKQ, a.P)
+    )
+    eta = (
+        a.eta + b.eta
+        + jnp.einsum("...ij,...j->...i", a.SK, b.rQm)
+        + MBm_SQ
+        + jnp.einsum("...ij,...j->...i", b.UKQ, a.m)
+    )
+    return HLA3ScanState(
+        SK=a.SK + b.SK, SQ=a.SQ + b.SQ, P=a.P + b.P, m=a.m + b.m,
+        F=F, eta=eta, RQP=a.RQP + b.RQP, rQm=a.rQm + b.rQm,
+        UKQ=a.UKQ + b.UKQ, W4=a.W4 + b.W4, W3=a.W3 + b.W3,
+    )
+
+
+def hla3_paper_scan(
+    q, k, v, *, normalize: bool = False, eps: float = 1e-6
+):
+    """Algorithm 4 via token-level associative scan (Theorem 7.2).
+
+    Faithful including materialized M maps — O(n d^3 dv) memory; use small
+    d (tests).  Chunked grouping is an associativity regrouping of the same
+    monoid, so this validates the chunk-parallel claim directly.
+    """
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    n, d = q.shape[-2], q.shape[-1]
+    dv = v.shape[-1]
+    q32 = jnp.moveaxis(q.astype(dtype), -2, 0)
+    k32 = jnp.moveaxis(k.astype(dtype), -2, 0)
+    v32 = jnp.moveaxis(v.astype(dtype), -2, 0)
+
+    DK = k32[..., :, None] * k32[..., None, :]
+    DQ = q32[..., :, None] * q32[..., None, :]
+    DP = k32[..., :, None] * v32[..., None, :]
+    alpha = jnp.einsum("n...d,n...d->n...", q32, k32)  # (q_t . k_t)
+    # F_token = DK DQ DP = alpha^2 k v^T ; eta_token = alpha^2 k
+    F0 = (alpha**2)[..., None, None] * DP
+    eta0 = (alpha**2)[..., None] * k32
+    RQP = alpha[..., None, None] * (q32[..., :, None] * v32[..., None, :])
+    rQm = alpha[..., None] * q32
+    UKQ = alpha[..., None, None] * (k32[..., :, None] * q32[..., None, :])
+    W4 = jnp.einsum("n...a,n...b,n...c,n...e->n...abce", k32, k32, k32, v32)
+    W3 = jnp.einsum("n...a,n...b,n...c->n...abc", k32, k32, k32)
+
+    elems = HLA3ScanState(DK, DQ, DP, k32, F0, eta0, RQP, rQm, UKQ, W4, W3)
+    inc = jax.lax.associative_scan(hla3_op, elems, axis=0)
+    o = jnp.einsum("n...d,n...de->n...e", q32, inc.F)
+    if normalize:
+        den = jnp.einsum("n...d,n...d->n...", q32, inc.eta)
+        o = o / (den[..., None] + eps)
+    return jnp.moveaxis(o, 0, -2).astype(v.dtype)
+
+
+# ----------------------- production chunkwise (gamma = 1) ------------------
+
+
+class HLA3ChunkState(NamedTuple):
+    SK: jax.Array
+    SQ: jax.Array
+    P: jax.Array
+    m: jax.Array
+    F: jax.Array
+    eta: jax.Array
+
+
+def hla3_paper_chunkwise(
+    q, k, v, *, chunk: int = 64, normalize: bool = False, eps: float = 1e-6,
+    state: Optional[HLA3ChunkState] = None,
+):
+    """Paper third-order operator, chunk-parallel, maps applied to carry.
+
+    Intra-chunk masked-matmul expansion of the F-recurrence (7.5); the ⊗3
+    cross terms (7.7) contract the carry with per-token scalars:
+
+        alpha_u = q_u . k_u          beta_u = k_u^T S_A^Q k_u
+
+    so M_B[S_A^Q] = K^T diag(beta) V etc. — never materializing d^3 maps.
+    """
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    n, d = q.shape[-2], q.shape[-1]
+    dv = v.shape[-1]
+    w = min(chunk, n)
+    if n % w != 0:
+        pad = w - n % w
+        zq = jnp.zeros(batch_shape + (pad, d), q.dtype)
+        zv = jnp.zeros(batch_shape + (pad, dv), v.dtype)
+        out, st = hla3_paper_chunkwise(
+            jnp.concatenate([q, zq], -2),
+            jnp.concatenate([k, zq], -2),
+            jnp.concatenate([v, zv], -2),
+            chunk=w, normalize=normalize, eps=eps, state=state,
+        )
+        return out[..., :n, :], st  # zero tokens are exact no-ops at gamma=1
+    nc = n // w
+
+    idx = jnp.arange(w)
+    L = (idx[:, None] >= idx[None, :]).astype(dtype)  # incl
+    Lst = (idx[:, None] > idx[None, :]).astype(dtype)  # strict
+    Ust = (idx[:, None] < idx[None, :]).astype(dtype)  # strict upper
+
+    if state is None:
+        z = functools.partial(jnp.zeros, dtype=dtype)
+        state = HLA3ChunkState(
+            SK=z(batch_shape + (d, d)), SQ=z(batch_shape + (d, d)),
+            P=z(batch_shape + (d, dv)), m=z(batch_shape + (d,)),
+            F=z(batch_shape + (d, dv)), eta=z(batch_shape + (d,)),
+        )
+    st0 = HLA3ChunkState(*(x.astype(dtype) for x in state))
+
+    qc = jnp.moveaxis(q.astype(dtype).reshape(batch_shape + (nc, w, d)), -3, 0)
+    kc = jnp.moveaxis(k.astype(dtype).reshape(batch_shape + (nc, w, d)), -3, 0)
+    vc = jnp.moveaxis(v.astype(dtype).reshape(batch_shape + (nc, w, dv)), -3, 0)
+
+    def body(carry: HLA3ChunkState, qkv):
+        Q, K, V = qkv
+        SA, SQA, PA, mA, FA, etaA = carry
+        ones = jnp.ones(batch_shape + (w, 1), dtype)
+        Vb = jnp.concatenate([V, ones], -1)  # fuse num/den columns
+
+        alpha = jnp.einsum("...td,...td->...t", Q, K)
+        beta = jnp.einsum("...td,...de,...te->...t", K, SQA, K)
+        A = jnp.einsum("...td,...jd->...tj", Q, K) * L  # (QK^T).L
+        KQs = jnp.einsum("...td,...jd->...tj", K, Q) * Ust  # (KQ^T), i<u
+        QKsV = jnp.einsum("...tj,...je->...te",
+                          jnp.einsum("...td,...jd->...tj", Q, K) * Lst, Vb)
+        # Y[u] = q_u^T P_{u-1}^loc  (strictly-lower first-order outputs)
+        Y = QKsV  # (w, dv+1)
+
+        # ---- local F terms (Eq. 7.5 expanded; see module docstring) ----
+        # (a) ((A_incl . (K Q^T strict-upper composed)) ) diag(alpha) V:
+        W2s = jnp.einsum("...ti,...iu->...tu", A, KQs) * L  # q_t^T S^K_{u-1} q_u
+        TA = jnp.einsum("...tu,...u,...ue->...te", W2s, alpha, Vb)
+        # (b) A diag(beta_loc) V with beta_loc = k_u^T S^Q_{u-1,loc} k_u
+        KQl = jnp.einsum("...ud,...jd->...uj", K, Q) * Lst  # (k_u.q_j), j<u
+        beta_loc = jnp.einsum("...uj,...uj->...u", KQl, KQl)
+        TB = jnp.einsum("...tu,...u,...ue->...te", A, beta_loc, Vb)
+        # (c) A diag(alpha) Y
+        TC = jnp.einsum("...tu,...u,...ue->...te", A, alpha, Y)
+        # (d) A diag(alpha^2) V
+        TD = jnp.einsum("...tu,...u,...ue->...te", A, alpha**2, Vb)
+
+        # ---- carry cross terms (⊗3 with A = carry, B = local prefix) ----
+        # q_t^T F_A
+        X0 = jnp.einsum("...td,...de->...te", Q,
+                        jnp.concatenate([FA, etaA[..., None]], -1))
+        # S_A^K R_B(t):  ((Q S_A Q^T).L) diag(alpha) V
+        QSQ = jnp.einsum("...td,...de,...ue->...tu", Q, SA, Q) * L
+        X1 = jnp.einsum("...tu,...u,...ue->...te", QSQ, alpha, Vb)
+        # M_B(t)[S_A^Q]: A diag(beta) V
+        X2 = jnp.einsum("...tu,...u,...ue->...te", A, beta, Vb)
+        # U_B(t) P_A: A diag(alpha) (Q [P_A | m_A])
+        QPA = jnp.einsum("...ud,...de->...ue", Q,
+                         jnp.concatenate([PA, mA[..., None]], -1))
+        X3 = jnp.einsum("...tu,...u,...ue->...te", A, alpha, QPA)
+
+        allt = X0 + X1 + X2 + X3 + TA + TB + TC + TD
+        num, den = allt[..., :dv], allt[..., dv]
+        o = num / (den[..., None] + eps) if normalize else num
+
+        # ---- chunk summary -> new carry (⊗3 with B = whole chunk) ----
+        SB = jnp.einsum("...ti,...tj->...ij", K, K)
+        SQB = jnp.einsum("...ti,...tj->...ij", Q, Q)
+        PB = jnp.einsum("...td,...te->...de", K, Vb)  # last col = m_B
+        RQPB = jnp.einsum("...t,...td,...te->...de", alpha, Q, Vb)
+        UKQB = jnp.einsum("...t,...td,...tj->...dj", alpha, K, Q)
+        MB_SQA = jnp.einsum("...t,...td,...te->...de", beta, K, Vb)
+        # F_B local: sum over u of the four (a)-(d) column contributions
+        Z1 = jnp.einsum("...td,...tu->...du", K, KQs)  # S^K_{u-1} q_u columns
+        FB = (
+            jnp.einsum("...du,...u,...ue->...de", Z1, alpha, Vb)
+            + jnp.einsum("...ud,...u,...ue->...de", K, beta_loc, Vb)
+            + jnp.einsum("...ud,...u,...ue->...de", K, alpha, Y)
+            + jnp.einsum("...ud,...u,...ue->...de", K, alpha**2, Vb)
+        )
+        Fnew_aug = (
+            jnp.concatenate([FA, etaA[..., None]], -1) + FB
+            + jnp.einsum("...ij,...je->...ie", SA, RQPB)
+            + MB_SQA
+            + jnp.einsum("...ij,...je->...ie", UKQB,
+                         jnp.concatenate([PA, mA[..., None]], -1))
+        )
+        new = HLA3ChunkState(
+            SK=SA + SB, SQ=SQA + SQB, P=PA + PB[..., :dv], m=mA + PB[..., dv],
+            F=Fnew_aug[..., :dv], eta=Fnew_aug[..., dv],
+        )
+        return new, o
+
+    final, outs = jax.lax.scan(body, st0, (qc, kc, vc))
+    out = jnp.moveaxis(outs, 0, -3).reshape(batch_shape + (n, dv))
+    return out.astype(v.dtype), final
+
+
+# ===========================================================================
+# Exact masked third order:  HLA3_exact = HLA2_masked ∘ LinAttn
+# ===========================================================================
+
+
+class HLA3ExactState(NamedTuple):
+    inner: LinAttnState  # (P, m) first-order pass
+    outer: HLA2State  # second-order pass over values (r | s)
+
+
+def hla3_exact_init_state(batch_shape, d, dv, dtype=jnp.float32):
+    return HLA3ExactState(
+        inner=linattn_init_state(batch_shape, d, dv + 1, dtype),
+        outer=hla2_init_state(batch_shape, d, dv + 1, dtype),
+    )
+
+
+def hla3_exact_step(
+    state: HLA3ExactState, q_t, k_t, v_t, gamma=None,
+    *, normalize: bool = False, eps: float = 1e-6,
+):
+    dtype = state.inner.P.dtype
+    v_aug = jnp.concatenate(
+        [v_t.astype(dtype), jnp.ones(v_t.shape[:-1] + (1,), dtype)], -1
+    )
+    inner, rs = linattn_step(state.inner, q_t, k_t, v_aug, gamma)
+    outer, o_aug = hla2_step(state.outer, q_t, k_t, rs, gamma)
+    num, den = o_aug[..., :-1], o_aug[..., -1]
+    o = num / (den[..., None] + eps) if normalize else num
+    return HLA3ExactState(inner, outer), o
+
+
+def hla3_exact_serial(
+    q, k, v, gamma=None, *, normalize: bool = False, eps: float = 1e-6,
+    state: Optional[HLA3ExactState] = None,
+):
+    batch_shape = q.shape[:-2]
+    d, dv = q.shape[-1], v.shape[-1]
+    if state is None:
+        state = hla3_exact_init_state(batch_shape, d, dv, _compute_dtype(q))
+
+    def body(st, qkv):
+        st, o = hla3_exact_step(st, *qkv, gamma, normalize=normalize, eps=eps)
+        return st, o
+
+    qs, ks, vs = (jnp.moveaxis(x, -2, 0) for x in (q, k, v))
+    state, os_ = jax.lax.scan(body, state, (qs, ks, vs))
+    return jnp.moveaxis(os_, 0, -2).astype(v.dtype), state
+
+
+def hla3_exact_chunkwise(
+    q, k, v, gamma=None, *, chunk: int = 64, normalize: bool = False,
+    eps: float = 1e-6, state: Optional[HLA3ExactState] = None,
+):
+    """Exact masked third order via LinAttn pass then HLA2 pass (chunked)."""
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    d, dv = q.shape[-1], v.shape[-1]
+    if state is None:
+        state = hla3_exact_init_state(batch_shape, d, dv, dtype)
+    ones = jnp.ones(v.shape[:-1] + (1,), dtype)
+    v_aug = jnp.concatenate([v.astype(dtype), ones], -1)
+    rs, inner = linattn_chunkwise(
+        q, k, v_aug, gamma, chunk=chunk, state=state.inner
+    )
+    o_aug, outer = hla2_chunkwise(
+        q, k, rs, gamma, chunk=chunk, state=state.outer
+    )
+    num, den = o_aug[..., :-1], o_aug[..., -1]
+    o = num / (den[..., None] + eps) if normalize else num
+    return o.astype(v.dtype), HLA3ExactState(inner, outer)
+
+
+def hla3_exact_naive(
+    q, k, v, gamma=None, *, normalize: bool = False, eps: float = 1e-6
+):
+    """Independent oracle: o = ((W W^T) ⊙ L)(W V), decayed per pass."""
+    dtype = _compute_dtype(q)
+    ones = jnp.ones(v.shape[:-1] + (1,), dtype)
+    v_aug = jnp.concatenate([v.astype(dtype), ones], -1)
+    rs = linattn_naive(q, k, v_aug, gamma)
+    o_aug = hla2_naive(q, k, rs, gamma)
+    num, den = o_aug[..., :-1], o_aug[..., -1]
+    return (num / (den[..., None] + eps) if normalize else num).astype(v.dtype)
+
+
+def hla3(
+    q, k, v, gamma=None, *, impl: str = "chunkwise", variant: str = "exact",
+    chunk: int = 64, normalize: bool = False, eps: float = 1e-6, state=None,
+):
+    """Front-end.  variant: 'exact' (corrected) or 'paper' (Alg 3/4)."""
+    if variant == "exact":
+        if impl == "chunkwise":
+            return hla3_exact_chunkwise(
+                q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
+                state=state,
+            )
+        if impl == "serial":
+            return hla3_exact_serial(
+                q, k, v, gamma, normalize=normalize, eps=eps, state=state
+            )
+        if impl == "naive":
+            return hla3_exact_naive(
+                q, k, v, gamma, normalize=normalize, eps=eps
+            ), None
+    else:
+        if impl == "chunkwise":
+            if gamma is not None:
+                raise NotImplementedError(
+                    "paper Alg. 4 chunk path is stated for gamma = 1"
+                )
+            return hla3_paper_chunkwise(
+                q, k, v, chunk=chunk, normalize=normalize, eps=eps, state=state
+            )
+        if impl == "scan":
+            return hla3_paper_scan(q, k, v, normalize=normalize, eps=eps), None
+        if impl == "serial":
+            return hla3_paper_serial(
+                q, k, v, gamma, normalize=normalize, eps=eps, state=state
+            )
+        if impl == "naive":
+            return hla3_paper_naive(q, k, v, normalize=normalize, eps=eps), None
+    raise ValueError((impl, variant))

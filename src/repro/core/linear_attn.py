@@ -1,0 +1,153 @@
+"""First-order (identity feature map) linear attention — Section 2.2 baseline.
+
+Also the inner building block of AHLA (= LinAttn o LinAttn) and of the exact
+third-order operator (= HLA2 o LinAttn); see DESIGN.md §2.
+
+    o_t = sum_{j<=t} gamma^(t-j) (q_t . k_j) v_j      (masked, decayed)
+
+State: P = sum g^(t-j) k_j v_j^T  (d, dv),  m = sum g^(t-j) k_j  (d,).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .hla2 import _compute_dtype, _decay_matrices, _gamma_arr
+
+
+class LinAttnState(NamedTuple):
+    P: jax.Array  # (..., d, dv)
+    m: jax.Array  # (..., d)
+
+
+def linattn_init_state(batch_shape, d, dv, dtype=jnp.float32) -> LinAttnState:
+    z = functools.partial(jnp.zeros, dtype=dtype)
+    return LinAttnState(P=z(batch_shape + (d, dv)), m=z(batch_shape + (d,)))
+
+
+def linattn_step(
+    state: LinAttnState,
+    q_t: jax.Array,
+    k_t: jax.Array,
+    v_t: jax.Array,
+    gamma=None,
+    *,
+    normalize: bool = False,
+    eps: float = 1e-6,
+):
+    dtype = state.P.dtype
+    q_t, k_t, v_t = q_t.astype(dtype), k_t.astype(dtype), v_t.astype(dtype)
+    g = _gamma_arr(gamma, q_t.shape[:-1], dtype)
+    P = g[..., None, None] * state.P + k_t[..., :, None] * v_t[..., None, :]
+    m = g[..., None] * state.m + k_t
+    o = jnp.einsum("...d,...de->...e", q_t, P)
+    if normalize:
+        den = jnp.einsum("...d,...d->...", q_t, m)
+        o = o / (den[..., None] + eps)
+    return LinAttnState(P, m), o
+
+
+def linattn_naive(
+    q, k, v, gamma=None, *, normalize: bool = False, eps: float = 1e-6
+):
+    dtype = _compute_dtype(q)
+    q32, k32, v32 = q.astype(dtype), k.astype(dtype), v.astype(dtype)
+    n = q.shape[-2]
+    g = _gamma_arr(gamma, q.shape[:-2], dtype)
+    Lg, _ = _decay_matrices(n, g, dtype)
+    A = jnp.einsum("...td,...jd->...tj", q32, k32) * Lg
+    num = jnp.einsum("...tj,...je->...te", A, v32)
+    if normalize:
+        num = num / (jnp.sum(A, -1)[..., None] + eps)
+    return num.astype(v.dtype)
+
+
+def linattn_chunkwise(
+    q,
+    k,
+    v,
+    gamma=None,
+    *,
+    chunk: int = 64,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    state: Optional[LinAttnState] = None,
+):
+    """Chunkwise masked linear attention.  Returns (o, final_state).
+
+    o_t = g^t q_t P0  +  row_t[(Q K^T . Lg) V]   per chunk, carry updated by
+    P0' = g^w P0 + sum g^(w-j) k_j v_j^T.
+    """
+    dtype = _compute_dtype(q)
+    batch_shape = q.shape[:-2]
+    n, d = q.shape[-2], q.shape[-1]
+    dv = v.shape[-1]
+    w = min(chunk, n)
+    if n % w != 0:
+        pad = w - n % w
+        zq = jnp.zeros(batch_shape + (pad, d), q.dtype)
+        zv = jnp.zeros(batch_shape + (pad, dv), v.dtype)
+        out, st = linattn_chunkwise(
+            jnp.concatenate([q, zq], -2),
+            jnp.concatenate([k, zq], -2),
+            jnp.concatenate([v, zv], -2),
+            gamma, chunk=w, normalize=normalize, eps=eps, state=state,
+        )
+        if gamma is not None:
+            inv = 1.0 / jnp.power(_gamma_arr(gamma, batch_shape, dtype), float(pad))
+            st = LinAttnState(st.P * inv[..., None, None], st.m * inv[..., None])
+        return out[..., :n, :], st
+    nc = n // w
+
+    g = _gamma_arr(gamma, batch_shape, dtype)
+    Lg, pow_t = _decay_matrices(w, g, dtype)
+    t_idx = jnp.arange(w)
+    pow_rev = jnp.power(g[..., None], (w - t_idx - 1).astype(dtype))
+    rho_w = jnp.power(g, float(w))
+
+    if state is None:
+        state = linattn_init_state(batch_shape, d, dv, dtype)
+    st0 = LinAttnState(*(x.astype(dtype) for x in state))
+
+    qc = jnp.moveaxis(q.astype(dtype).reshape(batch_shape + (nc, w, d)), -3, 0)
+    kc = jnp.moveaxis(k.astype(dtype).reshape(batch_shape + (nc, w, d)), -3, 0)
+    vc = jnp.moveaxis(v.astype(dtype).reshape(batch_shape + (nc, w, dv)), -3, 0)
+
+    def body(carry: LinAttnState, qkv):
+        Q, K, V = qkv
+        P0, m0 = carry
+        A = jnp.einsum("...td,...jd->...tj", Q, K) * Lg
+        num = pow_t[..., None] * jnp.einsum("...td,...de->...te", Q, P0)
+        num = num + jnp.einsum("...tj,...je->...te", A, V)
+        if normalize:
+            den = pow_t * jnp.einsum("...td,...d->...t", Q, m0) + jnp.sum(A, -1)
+            o = num / (den[..., None] + eps)
+        else:
+            o = num
+        Kg = pow_rev[..., None] * K
+        P = rho_w[..., None, None] * P0 + jnp.einsum("...td,...te->...de", Kg, V)
+        m = rho_w[..., None] * m0 + jnp.einsum("...td->...d", Kg)
+        return LinAttnState(P, m), o
+
+    final, outs = jax.lax.scan(body, st0, (qc, kc, vc))
+    out = jnp.moveaxis(outs, 0, -3).reshape(batch_shape + (n, dv))
+    return out.astype(v.dtype), final
+
+
+def linattn(
+    q, k, v, gamma=None, *, impl: str = "chunkwise", chunk: int = 64,
+    normalize: bool = False, eps: float = 1e-6,
+    state: Optional[LinAttnState] = None,
+):
+    if impl == "chunkwise":
+        return linattn_chunkwise(
+            q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
+            state=state,
+        )
+    if impl == "naive":
+        return linattn_naive(q, k, v, gamma, normalize=normalize, eps=eps), None
+    raise ValueError(impl)

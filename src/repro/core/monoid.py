@@ -1,0 +1,37 @@
+"""Associative operators used by the chunk-parallel scans (paper §4, §6, §7).
+
+Aggregated here for the property tests (associativity, identity, scan
+prefix equivalence) and for documentation.  Each operator composes the
+summary of segment A followed by segment B.
+"""
+
+from .ahla import (
+    AHLADecayState,
+    AHLAState,
+    ahla_op,
+    ahla_op_decay,
+    ahla_op_decay_paper,
+)
+from .hla2 import (
+    HLA2DecayState,
+    HLA2State,
+    masked_op,
+    masked_op_decay,
+    masked_op_decay_paper,
+)
+from .hla3 import HLA3ScanState, hla3_op
+
+__all__ = [
+    "HLA2State",
+    "HLA2DecayState",
+    "masked_op",
+    "masked_op_decay",
+    "masked_op_decay_paper",
+    "AHLAState",
+    "AHLADecayState",
+    "ahla_op",
+    "ahla_op_decay",
+    "ahla_op_decay_paper",
+    "HLA3ScanState",
+    "hla3_op",
+]

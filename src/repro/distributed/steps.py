@@ -1,0 +1,273 @@
+"""Distributed step builders: train / prefill / serve, with shardings.
+
+These produce the functions that ``launch/train.py``, ``launch/serve.py``
+and ``launch/dryrun.py`` jit with explicit in/out shardings, plus
+``input_specs()`` — ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every input of each step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import lm, whisper
+from ..models.param import abstract_params, init_params
+from ..optim import adamw
+from . import sharding as shd
+
+
+# --------------------------------------------------------------------------
+# loss / model dispatch
+# --------------------------------------------------------------------------
+
+
+def _loss_fn(params, batch, cfg):
+    if cfg.enc_layers:
+        return whisper.whisper_loss(
+            params, batch["tokens"], batch["labels"], batch["frames"], cfg
+        )
+    return lm.lm_loss(
+        params, batch["tokens"], batch["labels"], cfg,
+        vis_embed=batch.get("vis_embed"),
+    )
+
+
+def model_specs(cfg):
+    import dataclasses
+
+    from ..models.param import is_spec
+
+    specs = whisper.whisper_specs(cfg) if cfg.enc_layers else lm.lm_specs(cfg)
+    pd = jnp.dtype(getattr(cfg, "param_dtype", "float32"))
+    if pd != jnp.float32:
+        specs = jax.tree.map(
+            lambda sp: dataclasses.replace(sp, dtype=pd), specs,
+            is_leaf=is_spec,
+        )
+    return specs
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg, opt_cfg: adamw.OptConfig, *, microbatches: int = 1,
+    grad_shardings=None,
+):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1 accumulates gradients with a lax.scan (memory/overlap
+    trade; DP gradient reduction overlaps the next microbatch's compute).
+    ``grad_shardings`` (pytree of NamedSharding, like params) pins the
+    accumulator layout — without it GSPMD may replicate the fp32 buffer.
+    """
+
+    def _pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, grad_shardings,
+        )
+
+    acc_dtype = jnp.dtype(getattr(cfg, "grad_accum_dtype", "float32"))
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, (ce, aux)), grads = jax.value_and_grad(
+                _loss_fn, has_aux=True
+            )(params, batch, cfg)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                (l, (c, a)), g = jax.value_and_grad(_loss_fn, has_aux=True)(
+                    params, mb, cfg
+                )
+                acc = _pin(jax.tree.map(
+                    lambda x, y: x + y.astype(acc_dtype), acc, g
+                ))
+                return (acc,), (l, c, a)
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, -1) + x.shape[1:]), batch
+            )
+            zeros = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params
+            ))
+            (gsum,), (ls, cs, aus) = jax.lax.scan(micro, (zeros,), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss, ce, aux = ls.mean(), cs.mean(), aus.mean()
+        params, opt_state, om = adamw.adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    """(params, batch) -> (last_logits, states).
+
+    States (KV caches sized to the prompt / HLA-SSM streaming states) are
+    allocated inside the step and filled — decode continues from them.
+    """
+
+    def prefill_step(params, batch):
+        B, n = batch["tokens"].shape
+        if cfg.enc_layers:
+            states = whisper.whisper_init_states(cfg, B, n)
+            logits, states, _ = whisper.whisper_apply(
+                params, batch["tokens"], batch["frames"], cfg,
+                states=states, mode="prefill",
+            )
+        else:
+            total = n + (cfg.vis_tokens or 0)  # VLM prepends patch tokens
+            states = (
+                lm.lm_init_states(cfg, B, total)
+                if cfg.mixer == "softmax" or cfg.group_size
+                else None  # streaming archs build state from scratch
+            )
+            logits, states, _ = lm.lm_apply(
+                params, batch["tokens"], cfg, states=states, mode="prefill",
+                vis_embed=batch.get("vis_embed"),
+            )
+        return logits[:, -1], states
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """(params, batch{tokens, positions}, states) -> (logits, states).
+
+    One new token per sequence against a pre-filled cache/state
+    (``decode_*`` / ``long_*`` shapes lower THIS, not train_step).
+    """
+
+    def serve_step(params, batch, states):
+        if cfg.enc_layers:
+            logits, states, _ = whisper.whisper_apply(
+                params, batch["tokens"], None, cfg, states=states,
+                positions=batch["positions"], mode="decode",
+            )
+        else:
+            logits, states, _ = lm.lm_apply(
+                params, batch["tokens"], cfg, states=states,
+                positions=batch["positions"], mode="decode",
+            )
+        return logits[:, -1], states
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# abstract inputs (dry-run) + shardings
+# --------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape_cfg, mesh):
+    """ShapeDtypeStruct stand-ins for the step inputs of this cell.
+
+    train/prefill: {tokens, labels?, frames?, vis_embed?}
+    decode: ({tokens, positions}, states)
+    """
+    B, n = shape_cfg.global_batch, shape_cfg.seq_len
+    bs = lambda shape, dt=jnp.int32: jax.ShapeDtypeStruct(  # noqa: E731
+        shape, dt, sharding=shd.batch_sharding(mesh, shape)
+    )
+    if shape_cfg.kind in ("train", "prefill"):
+        batch = {"tokens": bs((B, n))}
+        if shape_cfg.kind == "train":
+            batch["labels"] = bs((B, n))
+        if cfg.enc_layers:
+            batch["frames"] = bs((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        if cfg.vis_tokens:
+            batch["vis_embed"] = bs((B, cfg.vis_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one token, cache/state sized to seq_len
+    batch = {"tokens": bs((B, 1)), "positions": bs((B, 1))}
+    states = state_specs(cfg, B, n, mesh)
+    return {"batch": batch, "states": states}
+
+
+def _state_spec_for_leaf(x, mesh):
+    """Heuristic logical axes for a stacked state leaf (see DESIGN.md §4):
+    dim0 = layers (replicated), dim1 = batch (pod+data), then the first
+    remaining dim divisible by the model-axis size is sharded on "model"."""
+    shape = x.shape
+    parts = [None] * len(shape)
+    present = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if len(shape) >= 2:
+        size = int(np.prod([mesh.shape[a] for a in present])) if present else 1
+        if present and shape[1] % size == 0:
+            parts[1] = present if len(present) > 1 else present[0]
+        elif "data" in mesh.axis_names and shape[1] % mesh.shape["data"] == 0:
+            parts[1] = "data"
+    if "model" in mesh.axis_names:
+        msize = mesh.shape["model"]
+        for i in range(2, len(shape)):
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                parts[i] = "model"
+                break
+    return NamedSharding(mesh, P(*parts))
+
+
+def state_specs(cfg, B, max_len, mesh):
+    """Abstract decode states with shardings (no allocation)."""
+    if cfg.enc_layers:
+        abstract = jax.eval_shape(
+            lambda: whisper.whisper_init_states(cfg, B, max_len)
+        )
+    else:
+        abstract = jax.eval_shape(lambda: lm.lm_init_states(cfg, B, max_len))
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, x.dtype, sharding=_state_spec_for_leaf(x, mesh)
+        ),
+        abstract,
+    )
+
+
+def make_shardings(cfg, mesh, *, zero1: bool = True):
+    """(param_shardings, opt_state_shardings) for this config/mesh."""
+    specs = model_specs(cfg)
+    ps = shd.param_shardings(specs, mesh)
+    mom = shd.opt_state_shardings(specs, mesh, zero1=zero1)
+    opt = adamw.OptState(
+        step=NamedSharding(mesh, P()),
+        mu=mom,
+        nu=jax.tree.map(lambda s: s, mom),
+    )
+    return ps, opt
+
+
+def abstract_train_args(cfg, mesh, *, zero1: bool = True):
+    """(params, opt_state) as sharded ShapeDtypeStructs (dry-run)."""
+    specs = model_specs(cfg)
+    ps, opt_sh = make_shardings(cfg, mesh, zero1=zero1)
+    aps = abstract_params(specs)
+    params = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        aps, ps,
+    )
+    md = jnp.dtype(getattr(cfg, "moment_dtype", "float32"))
+    opt_state = adamw.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=opt_sh.step),
+        mu=jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, md, sharding=s),
+            aps, opt_sh.mu,
+        ),
+        nu=jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, md, sharding=s),
+            aps, opt_sh.nu,
+        ),
+    )
+    return params, opt_state

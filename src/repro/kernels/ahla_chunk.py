@@ -1,0 +1,155 @@
+"""Fused chunkwise AHLA forward — Pallas TPU kernel.
+
+AHLA = LinAttn o LinAttn (DESIGN.md §2): both passes are fused in one
+kernel so the intermediate first-order outputs ``r`` never leave VMEM.
+The carry ``(P | m, E | n)`` (den columns augmented) persists in VMEM
+scratch across the sequential chunk axis.  Grid/BlockSpec layout mirrors
+``hla2_chunk.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .hla2_chunk import _decay_mats
+
+
+def _ahla_chunk_kernel(
+    gamma_ref,  # (1, 1)
+    q_ref,  # (1, w, d)
+    k_ref,  # (1, w, d)
+    v_ref,  # (1, w, dv)
+    o_ref,  # (1, w, dv)
+    P_out,  # (1, d, dv+1)   [P | m]
+    E_out,  # (1, d, dv+1)   [E | n]
+    P,  # scratch (d, dv+1)
+    E,  # scratch (d, dv+1)
+    *,
+    w: int,
+    normalize: bool,
+    eps: float,
+    has_decay: bool,
+    n_chunks: int,
+):
+    c = pl.program_id(1)
+    f32 = jnp.float32
+
+    @pl.when(c == 0)
+    def _init():
+        P[...] = jnp.zeros_like(P)
+        E[...] = jnp.zeros_like(E)
+
+    Q = q_ref[0].astype(f32)
+    K = k_ref[0].astype(f32)
+    V = v_ref[0].astype(f32)
+    Vb = jnp.concatenate([V, jnp.ones((w, 1), f32)], axis=-1)
+
+    g = gamma_ref[0, 0].astype(f32) if has_decay else jnp.ones((), f32)
+    Lg, pow_t, pow_rev, mask = _decay_mats(w, g, f32)
+
+    dot = functools.partial(jax.lax.dot_general, preferred_element_type=f32)
+    mm = lambda a, b: dot(a, b, (((1,), (0,)), ((), ())))  # noqa: E731
+    mmT = lambda a, b: dot(a, b, (((1,), (1,)), ((), ())))  # noqa: E731
+
+    P0, E0 = P[...], E[...]
+    A = mmT(Q, K) * Lg
+    AV = mm(A, Vb)  # local first-order outputs
+    r = pow_t[:, None] * mm(Q, P0) + AV  # carry-inclusive r_t | s_t
+    o_aug = pow_t[:, None] * mm(Q, E0) + mm(A, r)
+    if normalize:
+        o = o_aug[:, :-1] / (o_aug[:, -1:] + eps)
+    else:
+        o = o_aug[:, :-1]
+    o_ref[0, :, :] = o.astype(o_ref.dtype)
+
+    rho = jnp.exp(jnp.log(g) * w)
+    Kg = pow_rev[:, None] * K
+    KgT_ = lambda X: dot(Kg, X, (((0,), (0,)), ((), ())))  # noqa: E731
+    R = dot(K, Q, (((0,), (0,)), ((), ())))  # (d, d) = sum_t k_t q_t^T (undecayed)
+    P_new = rho * P0 + KgT_(Vb)
+    E_new = rho * E0 + KgT_(AV) + rho * mm(R, P0)
+    P[...] = P_new
+    E[...] = E_new
+
+    @pl.when(c == n_chunks - 1)
+    def _write_state():
+        P_out[0] = P[...].astype(P_out.dtype)
+        E_out[0] = E[...].astype(E_out.dtype)
+
+
+def ahla_chunk_pallas(
+    q: jax.Array,  # (BH, n, d)
+    k: jax.Array,
+    v: jax.Array,
+    gamma: jax.Array | None = None,
+    *,
+    chunk: int = 128,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    interpret: bool | None = None,
+):
+    """Fused AHLA forward.  Returns (o, (P, m, E, n))."""
+    BH, n, d = q.shape
+    dv = v.shape[-1]
+    w = min(chunk, n)
+    assert n % w == 0, "pad sequences to a multiple of the chunk width"
+    nc = n // w
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    has_decay = gamma is not None
+    gamma_in = (
+        jnp.ones((BH, 1), jnp.float32)
+        if gamma is None
+        else gamma.reshape(BH, 1).astype(jnp.float32)
+    )
+    kernel = functools.partial(
+        _ahla_chunk_kernel,
+        w=w,
+        normalize=normalize,
+        eps=eps,
+        has_decay=has_decay,
+        n_chunks=nc,
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((BH, n, dv), v.dtype),
+        jax.ShapeDtypeStruct((BH, d, dv + 1), jnp.float32),
+        jax.ShapeDtypeStruct((BH, d, dv + 1), jnp.float32),
+    )
+    grid = (BH, nc)
+    in_specs = [
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+            pl.BlockSpec((1, w, d), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, w, d), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, w, dv), lambda i, c: (i, c, 0)),
+    ]
+    out_specs = [
+            pl.BlockSpec((1, w, dv), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, d, dv + 1), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, d, dv + 1), lambda i, c: (i, 0, 0)),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((d, dv + 1), jnp.float32),
+        pltpu.VMEM((d, dv + 1), jnp.float32),
+    ]
+    compiler_params = None
+    if not interpret:
+        _CP = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams"
+        )
+        compiler_params = _CP(dimension_semantics=("parallel", "arbitrary"))
+    o, Pa, Ea = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+        compiler_params=compiler_params,
+    )(gamma_in, q, k, v)
+    return o, (Pa[..., :dv], Pa[..., dv], Ea[..., :dv], Ea[..., dv])

@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``hla2_attention`` / ``ahla_attention`` take model-layout tensors
+``(B, H, n, d)`` and dispatch to the fused Pallas kernel for the forward
+pass.  The backward pass is a ``custom_vjp`` that differentiates the
+bit-identical pure-jnp chunkwise reference (recompute-in-backward): the
+kernel and the reference compute the same math, so gradients are exact
+while the hot forward path stays fused.  ``use_pallas=False`` falls back to
+the reference end to end (used on CPU training runs; the kernel itself is
+exercised in interpret mode by the tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .ahla_chunk import ahla_chunk_pallas
+from .hla2_chunk import hla2_chunk_pallas
+
+
+def _merge_bh(x):
+    B, H = x.shape[:2]
+    return x.reshape((B * H,) + x.shape[2:]), B, H
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
+)
+def _hla2_fwd_core(q, k, v, gamma, chunk, normalize, eps, lam, use_pallas):
+    if use_pallas:
+        qf, B, H = _merge_bh(q)
+        kf, _, _ = _merge_bh(k)
+        vf, _, _ = _merge_bh(v)
+        gf = None if gamma is None else gamma.reshape(B * H)
+        o, _ = hla2_chunk_pallas(
+            qf, kf, vf, gf, chunk=chunk, normalize=normalize, eps=eps, lam=lam
+        )
+        return o.reshape(q.shape[:2] + o.shape[1:])
+    o, _ = _ref.hla2_chunk_ref(
+        q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps, lam=lam
+    )
+    return o
+
+
+def _hla2_vjp_fwd(q, k, v, gamma, chunk, normalize, eps, lam, use_pallas):
+    out = _hla2_fwd_core(q, k, v, gamma, chunk, normalize, eps, lam, use_pallas)
+    return out, (q, k, v, gamma)
+
+
+def _hla2_vjp_bwd(chunk, normalize, eps, lam, use_pallas, res, g):
+    q, k, v, gamma = res
+
+    def f(q_, k_, v_, gamma_):
+        o, _ = _ref.hla2_chunk_ref(
+            q_, k_, v_, gamma_, chunk=chunk, normalize=normalize, eps=eps,
+            lam=lam,
+        )
+        return o
+
+    if gamma is None:
+        _, vjp = jax.vjp(lambda a, b, c: f(a, b, c, None), q, k, v)
+        return (*vjp(g), None)
+    _, vjp = jax.vjp(f, q, k, v, gamma)
+    return vjp(g)
+
+
+_hla2_fwd_core.defvjp(_hla2_vjp_fwd, _hla2_vjp_bwd)
+
+
+def hla2_attention(
+    q, k, v, gamma=None, *, chunk: int = 128, normalize: bool = False,
+    eps: float = 1e-6, lam: float = 0.0, use_pallas: bool = True,
+):
+    """Masked second-order HLA over (B, H, n, d) tensors (fused forward)."""
+    return _hla2_fwd_core(
+        q, k, v, gamma, chunk, normalize, eps, lam, use_pallas
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas):
+    if use_pallas:
+        qf, B, H = _merge_bh(q)
+        kf, _, _ = _merge_bh(k)
+        vf, _, _ = _merge_bh(v)
+        gf = None if gamma is None else gamma.reshape(B * H)
+        o, _ = ahla_chunk_pallas(
+            qf, kf, vf, gf, chunk=chunk, normalize=normalize, eps=eps
+        )
+        return o.reshape(q.shape[:2] + o.shape[1:])
+    o, _ = _ref.ahla_chunk_ref(
+        q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps
+    )
+    return o
+
+
+def _ahla_vjp_fwd(q, k, v, gamma, chunk, normalize, eps, use_pallas):
+    out = _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas)
+    return out, (q, k, v, gamma)
+
+
+def _ahla_vjp_bwd(chunk, normalize, eps, use_pallas, res, g):
+    q, k, v, gamma = res
+
+    def f(q_, k_, v_, gamma_):
+        o, _ = _ref.ahla_chunk_ref(
+            q_, k_, v_, gamma_, chunk=chunk, normalize=normalize, eps=eps
+        )
+        return o
+
+    if gamma is None:
+        _, vjp = jax.vjp(lambda a, b, c: f(a, b, c, None), q, k, v)
+        return (*vjp(g), None)
+    _, vjp = jax.vjp(f, q, k, v, gamma)
+    return vjp(g)
+
+
+_ahla_fwd_core.defvjp(_ahla_vjp_fwd, _ahla_vjp_bwd)
+
+
+def ahla_attention(
+    q, k, v, gamma=None, *, chunk: int = 128, normalize: bool = False,
+    eps: float = 1e-6, use_pallas: bool = True,
+):
+    """AHLA over (B, H, n, d) tensors (fused forward)."""
+    return _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The kernels compute the same chunkwise math as ``repro.core`` — these
+wrappers pin the exact reference semantics (shapes ``(BH, n, d)``) used by
+the per-kernel allclose tests and by the custom-VJP backward pass.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.ahla import ahla_chunkwise
+from ..core.hla2 import hla2_chunkwise
+
+
+def hla2_chunk_ref(
+    q, k, v, gamma=None, *, chunk=128, normalize=False, eps=1e-6, lam=0.0
+):
+    """Reference for kernels.hla2_chunk — returns (o, (S, C, m, G, h))."""
+    o, st = hla2_chunkwise(
+        q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps, lam=lam
+    )
+    return o, tuple(jnp.asarray(x) for x in st)
+
+
+def ahla_chunk_ref(q, k, v, gamma=None, *, chunk=128, normalize=False, eps=1e-6):
+    """Reference for kernels.ahla_chunk — returns (o, (P, m, E, n))."""
+    o, st = ahla_chunkwise(
+        q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps
+    )
+    return o, (st.P, st.m, st.E, st.n)

@@ -1,0 +1,263 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k [--multi-pod] [--json out.json]
+
+Per the contract, the XLA_FLAGS line above is the FIRST statement — before
+any other import — since jax locks the device count on first init.  Set
+DRYRUN_DEVICES=8 (with --mesh 2x4) for the reduced CI variant.
+
+Outputs: memory_analysis (fits / per-device bytes), cost_analysis
+(FLOPs / bytes for §Roofline), and the collective-bytes breakdown parsed
+from the compiled HLO (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute).
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..analysis.hlo_analysis import analyze as hlo_analyze  # noqa: E402
+from ..configs import get_config  # noqa: E402
+from ..distributed import steps as steps_mod  # noqa: E402
+from ..models.config import get_shape  # noqa: E402
+from ..optim import adamw  # noqa: E402
+from .mesh import make_mesh, make_production_mesh  # noqa: E402
+
+# v5e-class hardware constants for §Roofline
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per chip for ring collectives)
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in the (SPMD) HLO.
+
+    Operand sizes ~ output sizes for these ops (all-gather outputs are the
+    gathered size — the honest wire-bytes upper bound per device).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(?:-start|-done)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        if re.search(rf"\b{op}-done\(", rhs):
+            continue  # counted at -start
+        # output shape(s) appear before the op name: "bf16[8,128]{...} all-..."
+        head = rhs.split(op)[0]
+        nbytes = 0
+        for dt, dims in shape_re.findall(head):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    return out, counts
+
+
+def lower_cell(arch, shape_name, mesh, *, mixer=None, microbatches=1,
+               zero1=True, long_ctx_note=None, hla_impl=None, hla_chunk=None,
+               gather_dtype=None):
+    """Lower + compile one cell.  Returns a result dict for §Dry-run."""
+    import dataclasses
+
+    shape_cfg = get_shape(shape_name)
+    cfg = get_config(arch, mixer=mixer)
+    note = long_ctx_note or ""
+    if shape_cfg.name == "long_500k" and cfg.mixer == "softmax" and mixer is None:
+        # pure full attention at 524k is infeasible (DESIGN.md §5):
+        # run the cell with the paper's HLA2 mixer swapped in.
+        cfg = get_config(arch, mixer="hla2")
+        note = "HLA2 mixer drop-in (O(1)-state decode); native softmax skipped by design"
+    if hla_impl or hla_chunk:
+        hla = dataclasses.replace(
+            cfg.hla,
+            **({"impl": hla_impl} if hla_impl else {}),
+            **({"chunk": hla_chunk} if hla_chunk else {}),
+        )
+        cfg = cfg.replace(hla=hla)
+        note = (note + f" hla_impl={hla.impl} chunk={hla.chunk}").strip()
+    if gather_dtype:
+        cfg = cfg.replace(gather_dtype=gather_dtype)
+        note = (note + f" gather_dtype={gather_dtype}").strip()
+
+    with mesh:
+        t0 = time.time()
+        if shape_cfg.kind == "train":
+            specs = steps_mod.model_specs(cfg)
+            from ..distributed import sharding as shd
+
+            gshard = shd.param_shardings(specs, mesh)
+            step = steps_mod.make_train_step(
+                cfg, adamw.OptConfig(), microbatches=microbatches,
+                grad_shardings=gshard,
+            )
+            params, opt_state = steps_mod.abstract_train_args(
+                cfg, mesh, zero1=zero1
+            )
+            batch = steps_mod.input_specs(cfg, shape_cfg, mesh)
+            lowered = jax.jit(step).lower(params, opt_state, batch)
+        elif shape_cfg.kind == "prefill":
+            step = steps_mod.make_prefill_step(cfg)
+            params, _ = steps_mod.abstract_train_args(cfg, mesh, zero1=False)
+            batch = steps_mod.input_specs(cfg, shape_cfg, mesh)
+            lowered = jax.jit(step).lower(params, batch)
+        else:  # decode
+            step = steps_mod.make_serve_step(cfg)
+            params, _ = steps_mod.abstract_train_args(cfg, mesh, zero1=False)
+            spec = steps_mod.input_specs(cfg, shape_cfg, mesh)
+            lowered = jax.jit(step).lower(params, spec["batch"], spec["states"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # loop-aware per-device account (cost_analysis counts while bodies ONCE
+    # — see repro/analysis/hlo_analysis.py); raw numbers kept alongside.
+    la = hlo_analyze(hlo)
+
+    n_dev = mesh.devices.size
+    flops = float(la["flops"])
+    bytes_accessed = float(la["bytes"])
+    coll_bytes = {k: int(v) for k, v in la["collective_bytes"].items()}
+    coll_counts = la["collective_counts"]
+    per_dev_coll = float(la["collective_total"])
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))),
+        "devices": int(n_dev),
+        "mixer": cfg.mixer,
+        "note": note,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+            ),
+        },
+        "cost": {
+            "flops": flops,
+            "bytes_accessed": bytes_accessed,
+            "raw_cost_analysis": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+        },
+        "collectives": {"bytes": coll_bytes, "counts": coll_counts},
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_accessed / HBM_BW,
+            "collective_s": per_dev_coll / ICI_BW,
+        },
+    }
+    terms = result["roofline"]
+    result["roofline"]["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None, help="e.g. 2x4 (reduced CI)")
+    ap.add_argument("--mixer", default=None, help="HLA mixer override")
+    ap.add_argument("--hla-impl", default=None,
+                    help="chunkwise | scan (paper-faithful baseline)")
+    ap.add_argument("--hla-chunk", type=int, default=None)
+    ap.add_argument("--gather-dtype", default=None,
+                    help="bfloat16 halves FSDP gather bytes (§Perf lever A)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--json", default=None, help="write result JSON here")
+    args = ap.parse_args(argv)
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):] if len(dims) == 3 else (
+            "data", "model")
+        mesh = make_mesh(dims, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    res = lower_cell(
+        args.arch, args.shape, mesh, mixer=args.mixer,
+        microbatches=args.microbatches, zero1=not args.no_zero1,
+        hla_impl=args.hla_impl, hla_chunk=args.hla_chunk,
+        gather_dtype=args.gather_dtype,
+    )
+    print(json.dumps(res, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+    # prove-it prints required by the deliverable:
+    print(
+        f"[dryrun] {args.arch} x {args.shape} on {res['mesh']}: "
+        f"compile OK in {res['compile_s']}s; "
+        f"peak {res['memory']['peak_bytes']/2**30:.2f} GiB/device; "
+        f"bottleneck {res['roofline']['bottleneck']}",
+        file=sys.stderr,
+    )
+    return res
+
+
+if __name__ == "__main__":
+    main()

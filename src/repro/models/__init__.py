@@ -1,0 +1,1 @@
+"""Composable model substrate (pure functional JAX)."""

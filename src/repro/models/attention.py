@@ -1,0 +1,190 @@
+"""Softmax attention: blockwise (flash-style) GQA + KV-cache decode.
+
+``flash_attention`` never materializes the (n, n) score matrix: it scans
+over KV blocks carrying (acc, row_max, row_sum) — O(n * block) memory, so
+prefill_32k fits HBM without a fused kernel (the paper's contribution is
+the HLA mixer; softmax stays pure JAX).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from .blocks import dense_apply, dense_specs, rope
+from .param import Spec
+
+NEG_INF = -1e30
+
+
+def attention_specs(cfg):
+    d, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_specs(d, H * dh, axes=("embed", "q_heads_flat"), bias=cfg.qkv_bias),
+        "wk": dense_specs(d, Hk * dh, axes=("embed", "kv_heads_flat"), bias=cfg.qkv_bias),
+        "wv": dense_specs(d, Hk * dh, axes=("embed", "kv_heads_flat"), bias=cfg.qkv_bias),
+        "wo": dense_specs(H * dh, d, axes=("q_heads_flat", "embed")),
+    }
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, nq, dh)
+    k: jax.Array,  # (B, Hk, nk, dh)
+    v: jax.Array,  # (B, Hk, nk, dh)
+    *,
+    causal: bool = True,
+    kv_block: int = 512,
+    q_offset: int = 0,  # absolute position of q[0] (for causal masking)
+    kv_len: Optional[jax.Array] = None,  # valid kv length (decode masking)
+    score_dtype=None,  # stored score/prob dtype; defaults to the input
+    # dtype (bf16 models store bf16 scores — §Perf lever D: fp32 score
+    # round-trips dominated the attention memory roofline term);
+    # accumulation is always fp32.
+):
+    """Blockwise softmax attention with online renormalization."""
+    if score_dtype is None:
+        score_dtype = (
+            jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+        )
+    B, H, nq, dh = q.shape
+    Hk, nk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, nq, dh).astype(score_dtype)
+    scale = jnp.asarray(1.0 / np.sqrt(dh), jnp.float32)
+
+    blk = min(kv_block, nk)
+    if nk % blk != 0:  # pad keys (masked out below)
+        pad = blk - nk % blk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pad_len = nk + pad
+    else:
+        pad_len = nk
+    nblk = pad_len // blk
+    kb = jnp.moveaxis(k.reshape(B, Hk, nblk, blk, dh), 2, 0).astype(score_dtype)
+    vb = jnp.moveaxis(v.reshape(B, Hk, nblk, blk, dh), 2, 0).astype(score_dtype)
+
+    q_pos = q_offset + jnp.arange(nq)
+
+    def body(carry, inp):
+        acc, mx, sm = carry
+        kblk, vblk, bidx = inp
+        kv_pos = bidx * blk + jnp.arange(blk)
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg, kblk,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        mask = kv_pos[None, :] < (kv_len if kv_len is not None else nk)
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        else:
+            mask = jnp.broadcast_to(mask, (nq, blk))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        new_mx = jnp.maximum(mx, jnp.max(s, axis=-1))
+        # probs stored in score_dtype (HBM); sums/acc accumulate fp32
+        p = jnp.exp((s - new_mx[..., None])).astype(score_dtype)
+        corr = jnp.exp(mx - new_mx)
+        sm = sm * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (acc, new_mx, sm), None
+
+    acc0 = jnp.zeros((B, Hk, G, nq, dh), jnp.float32)
+    mx0 = jnp.full((B, Hk, G, nq), NEG_INF, jnp.float32)
+    sm0 = jnp.zeros((B, Hk, G, nq), jnp.float32)
+    (acc, mx, sm), _ = jax.lax.scan(
+        body, (acc0, mx0, sm0), (kb, vb, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(sm[..., None], 1e-30)
+    return out.reshape(B, H, nq, dh).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, Hk, max_len, dh)
+    v: jax.Array  # (B, Hk, max_len, dh)
+    length: jax.Array  # () int32 — tokens currently valid
+
+
+def init_kv_cache(B, Hk, max_len, dh, dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((B, Hk, max_len, dh), dtype),
+        v=jnp.zeros((B, Hk, max_len, dh), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def attention_apply(
+    p,
+    x: jax.Array,  # (B, n, d)
+    cfg,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[KVCache] = None,
+    cross_kv: Optional[tuple] = None,  # (k, v) for cross-attention
+    causal: bool = True,
+    use_rope: bool = True,
+):
+    """Self- or cross-attention sublayer.  Returns (out, new_cache)."""
+    B, n, _ = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense_apply(p["wq"], x).reshape(B, n, H, dh)
+    if positions is None:
+        positions = jnp.arange(n)[None, :]
+
+    if cross_kv is None:
+        k = dense_apply(p["wk"], x).reshape(B, n, Hk, dh)
+        v = dense_apply(p["wv"], x).reshape(B, n, Hk, dh)
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        q = constrain(jnp.swapaxes(q, 1, 2), ("batch", "q_heads", None, None))
+        k = constrain(jnp.swapaxes(k, 1, 2), ("batch", "kv_heads", None, None))
+        v = constrain(jnp.swapaxes(v, 1, 2), ("batch", "kv_heads", None, None))
+        new_cache = None
+        if cache is not None:
+            zero = jnp.zeros((), cache.length.dtype)
+            idx = (zero, zero, cache.length, zero)
+            k = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), idx
+            )
+            v = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), idx
+            )
+            new_cache = KVCache(k, v, cache.length + n)
+            out = flash_attention(
+                q, k, v, causal=causal, q_offset=cache.length,
+                kv_len=cache.length + n,
+            )
+        else:
+            out = flash_attention(q, k, v, causal=causal)
+    else:
+        kc, vc = cross_kv  # precomputed encoder K/V: (B, Hk, ne, dh)
+        q = jnp.swapaxes(q, 1, 2)
+        out = flash_attention(q, kc, vc, causal=False)
+        new_cache = None
+
+    out = jnp.swapaxes(out, 1, 2).reshape(B, n, H * dh)
+    out = constrain(out, ("batch", None, "q_heads_flat"))
+    return dense_apply(p["wo"], out), new_cache
+
+
+def cross_kv_specs(cfg):
+    d, Hk, dh = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wk": dense_specs(d, Hk * dh, axes=("embed", "kv_heads_flat")),
+        "wv": dense_specs(d, Hk * dh, axes=("embed", "kv_heads_flat")),
+    }
+
+
+def cross_kv_apply(p, enc_out, cfg):
+    B, ne, _ = enc_out.shape
+    Hk, dh = cfg.n_kv_heads, cfg.head_dim
+    k = dense_apply(p["wk"], enc_out).reshape(B, ne, Hk, dh)
+    v = dense_apply(p["wv"], enc_out).reshape(B, ne, Hk, dh)
+    return jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)

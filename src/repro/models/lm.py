@@ -1,0 +1,335 @@
+"""Decoder-only LM assembly: uniform / hybrid stacks, train / prefill / decode.
+
+Layers are stacked (leading "layers" axis on every param leaf) and applied
+with ``lax.scan`` — one layer body in the HLO regardless of depth (fast
+compiles, pipeline-friendly).  Hybrid (jamba) stacks scan over *groups* of
+``group_size`` layers (1 attention/HLA + rest mamba, MoE on alternate
+positions), unrolled inside the scan body.
+
+Decode states are stacked pytrees matching the scan structure:
+softmax -> KVCache, hla*/linattn -> core state tuples, mamba -> MambaState,
+rwkv6 -> RWKVState.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mixer as mixer_mod
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from . import ssm as ssm_mod
+from .blocks import (
+    embed_apply,
+    embed_specs,
+    mlp_apply,
+    mlp_specs,
+    rmsnorm_apply,
+    rmsnorm_specs,
+    unembed_apply,
+)
+from .param import Spec, is_spec
+from ..distributed.sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# per-layer specs / apply
+# --------------------------------------------------------------------------
+
+
+def _mixer_kind(cfg) -> str:
+    if cfg.mixer == "softmax":
+        return "attn"
+    if cfg.mixer == "rwkv6":
+        return "rwkv6"
+    return "mixer"  # hla2 | ahla | hla3 | hla3_paper | linattn
+
+
+def layer_specs(cfg, kind: str, use_moe: bool):
+    if kind == "rwkv6":
+        return rwkv_mod.rwkv6_specs(cfg)  # self-contained (owns norms)
+    s = {"ln1": rmsnorm_specs(cfg.d_model), "ln2": rmsnorm_specs(cfg.d_model)}
+    if kind == "attn":
+        s["attn"] = attn_mod.attention_specs(cfg)
+    elif kind == "mixer":
+        s["mixer"] = mixer_mod.mixer_specs(cfg)
+    elif kind == "mamba":
+        s["mamba"] = ssm_mod.mamba_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if use_moe:
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp)
+    return s
+
+
+def layer_apply(
+    p, x, cfg, kind: str, use_moe: bool, *,
+    positions=None, state=None, mode: str = "train",
+):
+    """Returns (x, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv6":
+        x, new_state = rwkv_mod.rwkv6_layer_apply(p, x, cfg, state)
+        return x, new_state, aux
+
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if kind == "attn":
+        if mode == "decode":
+            y, new_state = attn_mod.attention_apply(
+                p["attn"], h, cfg, positions=positions, cache=state
+            )
+        elif mode == "prefill":
+            # fill the cache while computing outputs
+            y, new_state = attn_mod.attention_apply(
+                p["attn"], h, cfg, positions=positions, cache=state
+            )
+        else:
+            y, new_state = attn_mod.attention_apply(
+                p["attn"], h, cfg, positions=positions
+            )
+    elif kind == "mixer":
+        if mode == "decode":
+            y, new_state = mixer_mod.mixer_step(p["mixer"], h, state, cfg)
+        else:
+            y, st = mixer_mod.mixer_apply(
+                p["mixer"], h, cfg, want_state=(mode == "prefill")
+            )
+            new_state = st if mode == "prefill" else None
+    elif kind == "mamba":
+        y, new_state = ssm_mod.mamba_apply(p["mamba"], h, cfg, state=state)
+        if mode == "train":
+            new_state = None
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg)
+    else:
+        y = mlp_apply(p["mlp"], h, cfg.mlp)
+    x = x + y
+    return x, new_state, aux
+
+
+def layer_init_state(cfg, kind: str, B: int, max_len: int):
+    if kind == "attn":
+        return attn_mod.init_kv_cache(
+            B, cfg.n_kv_heads, max_len, cfg.head_dim
+        )
+    if kind == "mixer":
+        return mixer_mod.mixer_init_state(cfg, B)
+    if kind == "mamba":
+        return ssm_mod.mamba_init_state(cfg, B)
+    if kind == "rwkv6":
+        return rwkv_mod.rwkv6_init_state(cfg, B)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# stacks
+# --------------------------------------------------------------------------
+
+
+def _stack_specs(specs, L: int):
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(L,) + s.shape, axes=("layers",) + s.axes
+        ),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def _group_layout(cfg):
+    """Hybrid (jamba) group layout: list of (kind, use_moe) per position."""
+    out = []
+    for i in range(cfg.group_size):
+        kind = "attn" if i == cfg.attn_index else "mamba"
+        if cfg.mixer in ("hla2", "ahla", "hla3", "hla3_paper", "linattn") and i == cfg.attn_index:
+            kind = "mixer"
+        use_moe = cfg.moe is not None and (i % cfg.moe.every == cfg.moe.every - 1)
+        out.append((kind, use_moe))
+    return out
+
+
+def lm_specs(cfg):
+    specs = {"embed": embed_specs(cfg.vocab, cfg.d_model)}
+    if cfg.group_size:
+        n_groups = cfg.n_layers // cfg.group_size
+        group = {
+            f"pos{i}": layer_specs(cfg, kind, use_moe)
+            for i, (kind, use_moe) in enumerate(_group_layout(cfg))
+        }
+        specs["groups"] = _stack_specs(group, n_groups)
+    else:
+        kind = _mixer_kind(cfg)
+        use_moe = cfg.moe is not None
+        specs["layers"] = _stack_specs(
+            layer_specs(cfg, kind, use_moe), cfg.n_layers
+        )
+    specs["final_norm"] = rmsnorm_specs(cfg.d_model)
+    if not cfg.tie_embeddings:
+        specs["unembed"] = {
+            "kernel": Spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+        }
+    return specs
+
+
+def _cast_stack(params, cfg):
+    """Optionally cast the stacked layer params before the scan: the FSDP
+    all-gather then moves bf16 instead of fp32 (half the collective bytes;
+    §Perf lever A).  Norm scales stay fp32 (they are recast to fp32 inside
+    the norm anyway; keeping them bf16 is also fine numerically)."""
+    gd = jnp.dtype(getattr(cfg, "gather_dtype", "float32"))
+    if gd == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda x: x.astype(gd) if x.dtype == jnp.float32 else x, params
+    )
+
+
+def _maybe_remat(f, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(f)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return f
+
+
+def lm_init_states(cfg, B: int, max_len: int):
+    """Stacked decode states matching the scan layout."""
+    if cfg.group_size:
+        n_groups = cfg.n_layers // cfg.group_size
+        one = {
+            f"pos{i}": layer_init_state(cfg, kind, B, max_len)
+            for i, (kind, _) in enumerate(_group_layout(cfg))
+        }
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one
+        )
+    kind = _mixer_kind(cfg)
+    one = layer_init_state(cfg, kind, B, max_len)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+    )
+
+
+def lm_apply(
+    params,
+    tokens: jax.Array,  # (B, n) int32
+    cfg,
+    *,
+    states=None,
+    positions: Optional[jax.Array] = None,
+    mode: str = "train",  # train | prefill | decode
+    vis_embed: Optional[jax.Array] = None,  # (B, nv, d) VLM stub frontend
+    return_hidden: bool = False,
+):
+    """Returns (logits, new_states, aux_loss)."""
+    B, n = tokens.shape
+    act_dtype = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens).astype(act_dtype)
+    if vis_embed is not None:
+        x = jnp.concatenate([vis_embed.astype(act_dtype), x], axis=1)
+        n = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(n)[None, :]
+
+    collect_state = mode in ("prefill", "decode")
+    if (
+        mode == "prefill"
+        and states is None
+        and (cfg.mixer == "softmax" or cfg.group_size)
+    ):
+        # softmax/hybrid archs need KV caches allocated to be filled
+        # (+ margin for subsequent decode); streaming archs build state
+        # from scratch.
+        states = lm_init_states(cfg, B, n + 64)
+
+    if cfg.group_size:
+        layout = _group_layout(cfg)
+
+        def group_body(carry, inp):
+            x, aux = carry
+            x = constrain(x, ("batch", "seq", "embed"))
+            gp = inp["params"]
+            gst = inp.get("state")
+            new_states = {}
+            for i, (kind, use_moe) in enumerate(layout):
+                st_i = gst[f"pos{i}"] if gst is not None else None
+                x, new_st, a = layer_apply(
+                    gp[f"pos{i}"], x, cfg, kind, use_moe,
+                    positions=positions, state=st_i, mode=mode,
+                )
+                new_states[f"pos{i}"] = new_st
+                aux = aux + a
+            ys = new_states if collect_state else 0.0
+            return (x, aux), ys
+
+        body = _maybe_remat(group_body, cfg)
+        xs = {"params": _cast_stack(params["groups"], cfg)}
+        if states is not None:
+            xs["state"] = states
+        (x, aux), new_states = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs
+        )
+    else:
+        kind = _mixer_kind(cfg)
+        use_moe = cfg.moe is not None
+
+        def layer_body(carry, inp):
+            x, aux = carry
+            x = constrain(x, ("batch", "seq", "embed"))
+            st = inp.get("state")
+            x, new_st, a = layer_apply(
+                inp["params"], x, cfg, kind, use_moe,
+                positions=positions, state=st, mode=mode,
+            )
+            ys = new_st if collect_state else 0.0
+            return (x, aux + a), ys
+
+        body = _maybe_remat(layer_body, cfg)
+        xs = {"params": _cast_stack(params["layers"], cfg)}
+        if states is not None:
+            xs["state"] = states
+        (x, aux), new_states = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs
+        )
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, (new_states if collect_state else None), aux
+    if cfg.tie_embeddings:
+        logits = unembed_apply(params["embed"], x)
+    else:
+        logits = jnp.einsum(
+            "...d,dv->...v", x, params["unembed"]["kernel"].astype(x.dtype)
+        )
+    return logits, (new_states if collect_state else None), aux
+
+
+def lm_loss(params, tokens, labels, cfg, *, vis_embed=None):
+    """Mean next-token CE (labels < 0 are ignored) + MoE aux.  fp32 loss."""
+    logits, _, aux = lm_apply(
+        params, tokens, cfg, mode="train", vis_embed=vis_embed
+    )
+    if vis_embed is not None:
+        logits = logits[:, vis_embed.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux, (ce, aux)

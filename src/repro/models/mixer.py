@@ -1,0 +1,193 @@
+"""The HLA mixer sublayer — the paper's drop-in attention replacement (§5.2).
+
+Multi-head projections around the core operators (hla2 / ahla / hla3 /
+hla3_paper / linattn), with:
+
+* per-head learnable decay gamma = sigmoid(a)  (cfg.hla.decay = "learned"),
+  or a fixed scalar ("fixed"), or none ("none");
+* GQA/MQA: K, V projected at n_kv_heads and broadcast to q heads — with
+  ``share_kv_state`` the decode state stores S^K once per KV group (§5.2);
+* optional ratio normalization (Eq. 3.4) and ridge lam (Alg. 1);
+* per-head RMS output norm (standard practice for unnormalized linear
+  attention outputs; paper is silent on output scaling — documented in
+  DESIGN.md §7);
+* training path: fused Pallas kernel (TPU) or jnp chunkwise (CPU);
+* decode path: O(1)-state streaming steps (view A).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# NOTE: ``repro.core.__init__`` re-exports functions named like the
+# submodules (``hla2``...), so module-level imports would grab the
+# function.  Bind the submodules through sys.modules instead.
+import importlib
+
+core_ahla = importlib.import_module("repro.core.ahla")
+core_hla2 = importlib.import_module("repro.core.hla2")
+core_hla3 = importlib.import_module("repro.core.hla3")
+core_lin = importlib.import_module("repro.core.linear_attn")
+from ..kernels import ops as kops
+from ..distributed.sharding import constrain
+from .blocks import dense_apply, dense_specs
+from .param import Spec
+
+
+class MixerState(NamedTuple):
+    """Per-layer streaming state for decode."""
+
+    kind: Any  # pytree payload (core state NamedTuple)
+
+
+def mixer_specs(cfg):
+    d, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": dense_specs(d, H * dh, axes=("embed", "q_heads_flat"), bias=cfg.qkv_bias),
+        "wk": dense_specs(d, Hk * dh, axes=("embed", "kv_heads_flat"), bias=cfg.qkv_bias),
+        "wv": dense_specs(d, Hk * dh, axes=("embed", "kv_heads_flat"), bias=cfg.qkv_bias),
+        "wo": dense_specs(H * dh, d, axes=("q_heads_flat", "embed")),
+        "out_scale": Spec((H, dh), ("q_heads", "head_dim"), init="ones"),
+    }
+    if cfg.hla.decay == "learned":
+        s["decay_a"] = Spec((H,), ("q_heads",), init="constant", const=3.0)
+    return s
+
+
+def _gamma(p, cfg, B):
+    if cfg.hla.decay == "none":
+        return None
+    if cfg.hla.decay == "fixed":
+        g = jnp.full((cfg.n_heads,), cfg.hla.fixed_gamma, jnp.float32)
+    else:
+        g = jax.nn.sigmoid(p["decay_a"].astype(jnp.float32))
+    return jnp.broadcast_to(g[None], (B, cfg.n_heads))
+
+
+def _project(p, x, cfg):
+    B, n, _ = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense_apply(p["wq"], x).reshape(B, n, H, dh).swapaxes(1, 2)
+    k = dense_apply(p["wk"], x).reshape(B, n, Hk, dh).swapaxes(1, 2)
+    v = dense_apply(p["wv"], x).reshape(B, n, Hk, dh).swapaxes(1, 2)
+    q = q * (dh**-0.5)
+    if Hk != H:  # GQA: broadcast KV heads to query heads
+        rep = H // Hk
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    spec = ("batch", "q_heads", None, None)
+    return (constrain(q, spec), constrain(k, spec), constrain(v, spec))
+
+
+def _out_norm(p, o, cfg, eps=1e-6):
+    """Per-head RMS norm + learned scale (stabilizes unnormalized HLA)."""
+    o32 = o.astype(jnp.float32)
+    var = jnp.mean(o32 * o32, axis=-1, keepdims=True)
+    o32 = o32 * jax.lax.rsqrt(var + eps)
+    return (o32 * p["out_scale"][None, :, None, :]).astype(o.dtype)
+
+
+def _variant(cfg):
+    """The operator actually requested: cfg.mixer names it when it is an
+    HLA-family mixer (the config override path sets cfg.mixer, not
+    cfg.hla.variant — a silent-hla2-everywhere bug caught by the recall
+    example producing identical losses for 'different' variants)."""
+    if cfg.mixer in ("hla2", "ahla", "hla3", "hla3_paper", "linattn"):
+        return cfg.mixer
+    return cfg.hla.variant
+
+
+def mixer_apply(p, x, cfg, want_state: bool = False):
+    """Training/prefill path over a full sequence.  Returns (out, final_state)."""
+    B, n, _ = x.shape
+    hc = cfg.hla
+    q, k, v = _project(p, x, cfg)
+    gamma = _gamma(p, cfg, B)
+    # the fused kernel path discards states; prefill needs them -> jnp path
+    use_pallas = (
+        hc.use_pallas and not want_state and jax.default_backend() == "tpu"
+    )
+    kw = dict(normalize=hc.normalize, eps=1e-6)
+    variant = _variant(cfg)
+
+    if variant == "hla2":
+        if hc.impl == "scan":  # paper-faithful token-level Blelloch
+            o, st = core_hla2.hla2_scan(q, k, v, gamma, lam=hc.lam, **kw)
+        elif use_pallas:
+            o = kops.hla2_attention(
+                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, **kw
+            )
+            st = None
+        else:
+            o, st = core_hla2.hla2_chunkwise(
+                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, **kw
+            )
+    elif variant == "ahla":
+        if hc.impl == "scan":
+            o, st = core_ahla.ahla_scan(q, k, v, gamma, **kw)
+        elif use_pallas:
+            o = kops.ahla_attention(q, k, v, gamma, chunk=hc.chunk, **kw)
+            st = None
+        else:
+            o, st = core_ahla.ahla_chunkwise(q, k, v, gamma, chunk=hc.chunk, **kw)
+    elif variant == "hla3":
+        o, st = core_hla3.hla3_exact_chunkwise(
+            q, k, v, gamma, chunk=hc.chunk, **kw
+        )
+    elif variant == "hla3_paper":
+        o, st = core_hla3.hla3_paper_chunkwise(q, k, v, chunk=hc.chunk, **kw)
+    elif variant == "linattn":
+        o, st = core_lin.linattn_chunkwise(q, k, v, gamma, chunk=hc.chunk, **kw)
+    else:
+        raise ValueError(variant)
+
+    o = _out_norm(p, o.astype(x.dtype), cfg)
+    o = o.swapaxes(1, 2).reshape(B, n, cfg.n_heads * cfg.head_dim)
+    o = constrain(o, ("batch", None, "q_heads_flat"))
+    return dense_apply(p["wo"], o), st
+
+
+def mixer_init_state(cfg, B, dtype=jnp.float32):
+    H, dh = cfg.n_heads, cfg.head_dim
+    variant = _variant(cfg)
+    if variant == "hla2":
+        return core_hla2.hla2_init_state((B, H), dh, dh, dtype)
+    if variant == "ahla":
+        return core_ahla.ahla_init_state((B, H), dh, dh, dtype)
+    if variant == "hla3":
+        return core_hla3.hla3_exact_init_state((B, H), dh, dh, dtype)
+    if variant == "hla3_paper":
+        return core_hla3.hla3_paper_init_state((B, H), dh, dh, dtype)
+    if variant == "linattn":
+        return core_lin.linattn_init_state((B, H), dh, dh, dtype)
+    raise ValueError(variant)
+
+
+def mixer_step(p, x_t, state, cfg):
+    """One-token decode.  x_t: (B, 1, d).  Returns (out, new_state)."""
+    B = x_t.shape[0]
+    hc = cfg.hla
+    q, k, v = _project(p, x_t, cfg)  # (B, H, 1, dh)
+    q1, k1, v1 = q[..., 0, :], k[..., 0, :], v[..., 0, :]
+    gamma = _gamma(p, cfg, B)
+    kw = dict(normalize=hc.normalize, eps=1e-6)
+    variant = _variant(cfg)
+    if variant == "hla2":
+        state, o = core_hla2.hla2_step(state, q1, k1, v1, gamma, lam=hc.lam, **kw)
+    elif variant == "ahla":
+        state, o = core_ahla.ahla_step(state, q1, k1, v1, gamma, **kw)
+    elif variant == "hla3":
+        state, o = core_hla3.hla3_exact_step(state, q1, k1, v1, gamma, **kw)
+    elif variant == "hla3_paper":
+        state, o = core_hla3.hla3_paper_step(state, q1, k1, v1, gamma, **kw)
+    elif variant == "linattn":
+        state, o = core_lin.linattn_step(state, q1, k1, v1, gamma, **kw)
+    else:
+        raise ValueError(variant)
+    o = o[..., None, :]  # (B, H, 1, dh)
+    o = _out_norm(p, o.astype(x_t.dtype), cfg)
+    o = o.swapaxes(1, 2).reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return dense_apply(p["wo"], o), state

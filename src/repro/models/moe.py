@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch.
+
+Scale-aware design (DESIGN.md §4): no (T, E, C) one-hot tensors, and no
+*global* sort — dispatch is vmapped per batch row, so each DP shard sorts
+only its local tokens (a global argsort would force GSPMD to all-gather
+the whole token set; found via the dry-run memory analysis).  Tokens are
+argsorted by expert id within the row, positioned inside their expert
+segment via a searchsorted offset, and scattered into a dense
+(B, E, C_row, d) buffer; expert weights live on the "experts" axis (mesh
+"model") so the (batch x experts) einsum materializes as all-to-all-style
+collectives.  Capacity is per-row: C_row = ceil(k * n * cf / E)
+(Switch-style; the dropped fraction is controlled by capacity_factor).
+
+Aux load-balance loss (Switch-style) is returned for the train loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .blocks import dense_specs
+from .param import Spec
+
+
+def moe_specs(cfg):
+    d = cfg.d_model
+    mc = cfg.moe
+    E, ff = mc.n_experts, mc.d_ff
+    if cfg.mlp == "swiglu":
+        expert = {
+            "wi_gate": Spec((E, d, ff), ("experts", "embed", "expert_ff")),
+            "wi_up": Spec((E, d, ff), ("experts", "embed", "expert_ff")),
+            "wo": Spec((E, ff, d), ("experts", "expert_ff", "embed")),
+        }
+    else:
+        expert = {
+            "wi": Spec((E, d, ff), ("experts", "embed", "expert_ff")),
+            "wo": Spec((E, ff, d), ("experts", "expert_ff", "embed")),
+        }
+    return {"router": dense_specs(d, E, axes=("embed", "experts")), **expert}
+
+
+def _expert_ffn(p, x, kind):
+    """x: (B, E, C, d) -> (B, E, C, d) with per-expert weights."""
+    if kind == "swiglu":
+        g = jnp.einsum("becd,edf->becf", x, p["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("becd,edf->becf", x, p["wi_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("becd,edf->becf", x, p["wi"].astype(x.dtype))
+        if kind == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+    return jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+
+
+def _dispatch_row(xt, gate_e, gate_w, E, C):
+    """One row, GATHER-only (scatters of d-wide rows lower terribly —
+    found via dry-run memory analysis).  xt (n, d); gate_e/w (n, K).
+
+    Returns (buf (E*C, d), dest_tok (n*K,) slot id per token-k in original
+    order, E*C = dropped)."""
+    n, d = xt.shape
+    K = gate_e.shape[-1]
+    nK = n * K
+    e_flat = gate_e.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n), K)
+    order = jnp.argsort(e_flat, stable=True)
+    se, stok = e_flat[order], tok[order]
+    starts = jnp.searchsorted(se, jnp.arange(E), side="left")
+    ends = jnp.concatenate([starts[1:], jnp.array([nK])])
+    # slot (e, c) <- sorted position starts[e] + c (valid while < ends[e])
+    slot_pos = starts[:, None] + jnp.arange(C)[None, :]  # (E, C)
+    slot_valid = slot_pos < ends[:, None]
+    slot_tok = stok[jnp.clip(slot_pos, 0, nK - 1)]
+    buf = xt[slot_tok.reshape(-1)] * slot_valid.reshape(-1, 1).astype(xt.dtype)
+    # per token-k slot id (original order) for the combine gather
+    pos = jnp.arange(nK) - starts[se]
+    keep = pos < C
+    dest_sorted = jnp.where(keep, se * C + pos, E * C)
+    inv = jnp.argsort(order, stable=True)
+    dest_tok = dest_sorted[inv]  # (n*K,)
+    return buf, dest_tok
+
+
+def _combine_row(y, dest_tok, gate_w, n, dtype):
+    """y (E*C, d); dest_tok (n*K,); gate_w (n, K) -> (n, d).  Gather-only."""
+    K = gate_w.shape[-1]
+    valid = (dest_tok < y.shape[0])[:, None]
+    rows = y[jnp.clip(dest_tok, 0, y.shape[0] - 1)] * valid.astype(y.dtype)
+    rows = rows.reshape(n, K, -1)
+    return jnp.einsum("nkd,nk->nd", rows, gate_w.astype(rows.dtype)).astype(dtype)
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, n, d).  Returns (y, aux_loss)."""
+    B, n, d = x.shape
+    mc = cfg.moe
+    E, K = mc.n_experts, mc.top_k
+
+    logits = jnp.einsum(
+        "bnd,de->bne", x.astype(jnp.float32),
+        p["router"]["kernel"].astype(jnp.float32),
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, n, E)
+    gate_w, gate_e = jax.lax.top_k(probs, K)
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+
+    # Switch aux loss over all tokens
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_e[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = mc.aux_loss_coef * E * jnp.sum(me * ce)
+
+    C = max(1, int(-(-K * n * mc.capacity_factor // E)))  # per-row capacity
+
+    buf, dest_tok = jax.vmap(
+        lambda xr, er, wr: _dispatch_row(xr, er, wr, E, C)
+    )(x, gate_e, gate_w)
+    buf = constrain(
+        buf.reshape(B, E, C, d), ("batch", "experts", None, None)
+    )
+    y = _expert_ffn(p, buf, cfg.mlp)
+    y = constrain(y, ("batch", "experts", None, None)).reshape(B, E * C, d)
+    out = jax.vmap(
+        lambda yr, dr, wr: _combine_row(yr, dr, wr, n, x.dtype)
+    )(y, dest_tok, gate_w)
+    return out, aux
+
+
+def moe_dense_oracle(p, x, cfg):
+    """O(T*E) reference: every expert on every token, then top-k combine.
+
+    Test-only — verifies routing/dispatch/combine for small shapes.
+    """
+    B, n, d = x.shape
+    mc = cfg.moe
+    E, K = mc.n_experts, mc.top_k
+    logits = jnp.einsum(
+        "bnd,de->bne", x.astype(jnp.float32),
+        p["router"]["kernel"].astype(jnp.float32),
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, K)
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+    # run every expert on every token: (B, E, n, d)
+    xb = jnp.broadcast_to(x[:, None], (B, E, n, d))
+    all_out = _expert_ffn(p, xb, cfg.mlp)  # (B, E, n, d)
+    out = jnp.zeros((B, n, d), jnp.float32)
+    for kk in range(K):
+        idx = gate_e[..., kk]  # (B, n)
+        sel = jnp.take_along_axis(
+            all_out, idx[:, None, :, None], axis=1
+        )[:, 0]
+        out = out + gate_w[..., kk : kk + 1] * sel.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,108 @@
+"""Single-source-of-truth parameter specs (MaxText-style logical axes).
+
+A model defines ``param_specs(cfg) -> pytree of Spec`` once; everything
+else derives from it:
+
+* ``init_params(specs, rng)``      — materialize arrays (per-leaf folded rng)
+* ``abstract_params(specs)``       — ShapeDtypeStructs (dry-run, no alloc)
+* ``logical_axes(specs)``          — pytree of logical-axis tuples
+* (distributed/sharding.py)        — logical axes -> PartitionSpecs
+
+Logical axis vocabulary: "vocab", "embed", "q_heads", "kv_heads",
+"head_dim", "ff", "experts", "expert_ff", "layers", "state", "conv",
+plus None for replicated dims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | constant
+    scale: Optional[float] = None  # override; default fan-in scaling
+    dtype: Any = jnp.float32
+    const: float = 0.0  # for init == "constant"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _leaf_paths(tree, prefix=()):
+    if is_spec(tree):
+        yield prefix, tree
+        return
+    for key in sorted(tree):
+        yield from _leaf_paths(tree[key], prefix + (key,))
+
+
+def _init_leaf(spec: Spec, rng: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.const, spec.dtype)
+    if spec.init == "embed":
+        scale = spec.scale if spec.scale is not None else 1.0
+        return scale * jax.random.normal(rng, spec.shape, spec.dtype)
+    if spec.init == "normal":
+        # fan-in scaled truncated normal (sum over all but last dim)
+        fan_in = int(np.prod(spec.shape[:-1])) if len(spec.shape) > 1 else 1
+        scale = (
+            spec.scale
+            if spec.scale is not None
+            else 1.0 / max(1.0, np.sqrt(fan_in))
+        )
+        return scale * jax.random.truncated_normal(
+            rng, -2.0, 2.0, spec.shape
+        ).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(specs, rng: jax.Array):
+    """Materialize a param pytree; rng folded per leaf path (stable)."""
+    out = {}
+    for path, spec in _leaf_paths(specs):
+        key = rng
+        for p in path:
+            key = jax.random.fold_in(key, hash(p) % (2**31))
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = _init_leaf(spec, key)
+    return out
+
+
+def abstract_params(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=is_spec,
+    )
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _leaf_paths(specs))
+
+
+def param_bytes(specs) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for _, s in _leaf_paths(specs)
+    )

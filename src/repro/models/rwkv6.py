@@ -1,0 +1,210 @@
+"""RWKV-6 (Finch) time-mix + channel-mix — attn-free arch (rwkv6-7b).
+
+Faithful core: matrix-valued per-head state with **data-dependent
+per-channel decay** w_t (low-rank MLP, the Finch hallmark), bonus ``u``
+for the current token, token-shift lerps, per-head GroupNorm, silu gate.
+Simplification (DESIGN.md §5): token-shift mix ratios are static
+(Eagle-style) except for the decay channel, which carries the full
+data-dependent low-rank path.  Chunk-parallel in log-decay space:
+cumulative log-decays inside a chunk, sequential carry across chunks —
+the same two-level skeleton as the HLA scans.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .blocks import dense_apply, dense_specs
+from .param import Spec
+
+
+LOGW_MIN = -2.5  # see decay clamp note in rwkv6_time_mix
+RWKV_CHUNK = 32  # |lc| <= w * |LOGW_MIN| = 80 < log(fp32 max) ~ 88
+
+
+class RWKVState(NamedTuple):
+    x_prev_t: jax.Array  # (B, 1, d) last token (time-mix shift)
+    x_prev_c: jax.Array  # (B, 1, d) last token (channel-mix shift)
+    S: jax.Array  # (B, H, dk, dv) wkv state
+
+
+def rwkv6_specs(cfg):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    lora = max(32, d // 64)
+    from .blocks import layernorm_specs
+
+    return {
+        "ln1": layernorm_specs(d),
+        "ln2": layernorm_specs(d),
+        "tm": {  # time mix
+            "mu_r": Spec((d,), ("embed",), init="constant", const=0.5),
+            "mu_k": Spec((d,), ("embed",), init="constant", const=0.5),
+            "mu_v": Spec((d,), ("embed",), init="constant", const=0.5),
+            "mu_g": Spec((d,), ("embed",), init="constant", const=0.5),
+            "mu_w": Spec((d,), ("embed",), init="constant", const=0.5),
+            "wr": dense_specs(d, d, axes=("embed", "q_heads_flat")),
+            "wk": dense_specs(d, d, axes=("embed", "q_heads_flat")),
+            "wv": dense_specs(d, d, axes=("embed", "q_heads_flat")),
+            "wg": dense_specs(d, d, axes=("embed", "q_heads_flat")),
+            "w_lora_a": dense_specs(d, lora, axes=("embed", None)),
+            "w_lora_b": dense_specs(lora, d, axes=(None, "q_heads_flat")),
+            "w0": Spec((d,), ("q_heads_flat",), init="constant", const=-5.0),
+            "u": Spec((H, dh), ("q_heads", "head_dim"), init="normal", scale=0.5),
+            "gn_scale": Spec((H, dh), ("q_heads", "head_dim"), init="ones"),
+            "gn_bias": Spec((H, dh), ("q_heads", "head_dim"), init="zeros"),
+            "wo": dense_specs(d, d, axes=("q_heads_flat", "embed")),
+        },
+        "cm": {  # channel mix
+            "mu_k": Spec((d,), ("embed",), init="constant", const=0.5),
+            "mu_r": Spec((d,), ("embed",), init="constant", const=0.5),
+            "wk": dense_specs(d, cfg.d_ff, axes=("embed", "ff")),
+            "wv": dense_specs(cfg.d_ff, d, axes=("ff", "embed")),
+            "wr": dense_specs(d, d, axes=("embed", "embed_out")),
+        },
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: returns previous-token tensor aligned with x."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def rwkv6_time_mix(p, x, cfg, state: RWKVState | None, chunk: int = RWKV_CHUNK):
+    B, n, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    xs = _shift(x, state.x_prev_t if state is not None else None)
+
+    r = dense_apply(p["wr"], _lerp(x, xs, p["mu_r"])).reshape(B, n, H, dh)
+    k = dense_apply(p["wk"], _lerp(x, xs, p["mu_k"])).reshape(B, n, H, dh)
+    v = dense_apply(p["wv"], _lerp(x, xs, p["mu_v"])).reshape(B, n, H, dh)
+    g = dense_apply(p["wg"], _lerp(x, xs, p["mu_g"]))
+    xw = _lerp(x, xs, p["mu_w"])
+    # data-dependent decay (Finch): logw in (-inf, 0)
+    dd = dense_apply(p["w_lora_b"], jnp.tanh(dense_apply(p["w_lora_a"], xw)))
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + dd.astype(jnp.float32))
+    # clamp keeps the chunk matmul factorization in fp32 range (and a
+    # per-token decay of exp(-2.5) ~ 0.08 already means "forget"):
+    logw = jnp.clip(logw, LOGW_MIN, -1e-6).reshape(B, n, H, dh)
+
+    hspec = ("batch", "q_heads", None, None)
+    r = constrain(jnp.swapaxes(r, 1, 2).astype(jnp.float32), hspec)
+    k = constrain(jnp.swapaxes(k, 1, 2).astype(jnp.float32), hspec)
+    v = constrain(jnp.swapaxes(v, 1, 2).astype(jnp.float32), hspec)
+    logw = constrain(jnp.swapaxes(logw, 1, 2), hspec)  # (B, H, n, dk)
+    u = p["u"].astype(jnp.float32)
+
+    S0 = (
+        state.S.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, H, dh, dh), jnp.float32)
+    )
+
+    w_ = min(chunk, n)
+    pad = (w_ - n % w_) % w_
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    npad = n + pad
+    nc = npad // w_
+
+    def reshape_chunks(t):
+        return jnp.moveaxis(
+            t.reshape(B, H, nc, w_, dh), 2, 0
+        )  # (nc, B, H, w, dh)
+
+    rc, kc, vc, wc = map(reshape_chunks, (r, k, v, logw))
+
+    def body(S, inp):
+        r_, k_, v_, lw_ = inp  # (B, H, w, dh)
+        lc = jnp.cumsum(lw_, axis=2)  # inclusive sum of log-decays
+        lc_ex = lc - lw_  # exclusive
+        # A[t, j] = sum_c r_t[c] k_j[c] exp(lc_ex[t,c] - lc[j,c]) for j < t.
+        # Exponent <= 0 always; the matmul factorization exp(lc_ex) x
+        # exp(-lc) individually can overflow, bounded by the logw clamp
+        # (>= LOGW_MIN) and the chunk width (see module docstring).
+        scores = jnp.einsum(
+            "bhtd,bhjd->bhtj", r_ * jnp.exp(lc_ex), k_ * jnp.exp(-lc)
+        )
+        tidx = jnp.arange(w_)
+        mask = (tidx[:, None] > tidx[None, :]).astype(jnp.float32)
+        A = scores * mask
+        y = jnp.einsum("bhtj,bhje->bhte", A, v_)
+        # current-token bonus (diag u): (r_t . (u ⊙ k_t)) v_t
+        bonus = jnp.sum(r_ * u[None, :, None] * k_, -1, keepdims=True) * v_
+        y = y + bonus
+        # carry term: r_t ⊙ exp(lc_ex[t]) applied to S0
+        y = y + jnp.einsum("bhtd,bhde->bhte", r_ * jnp.exp(lc_ex), S)
+        # state update: S' = exp(lc[end]) ⊙_rows S + sum_j exp(lc_end - lc_j) k_j v_j^T
+        lc_end = lc[..., -1:, :]  # (B, H, 1, dk)
+        Snew = jnp.exp(lc_end[..., 0, :])[..., :, None] * S + jnp.einsum(
+            "bhjd,bhje->bhde", k_ * jnp.exp(lc_end - lc), v_
+        )
+        return Snew, y
+
+    Sf, ys = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, npad, dh)[:, :, :n]
+
+    # per-head GroupNorm + gate
+    mu = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    yn = yn * p["gn_scale"][None, :, None] + p["gn_bias"][None, :, None]
+    yn = jnp.swapaxes(yn, 1, 2).reshape(B, n, d).astype(x.dtype)
+    out = dense_apply(p["wo"], yn * jax.nn.silu(g))
+    new_state = RWKVState(
+        x_prev_t=x[:, -1:],
+        x_prev_c=state.x_prev_c if state is not None else jnp.zeros_like(x[:, :1]),
+        S=Sf,
+    )
+    return out, new_state
+
+
+def rwkv6_channel_mix(p, x, cfg, state: RWKVState | None):
+    xs = _shift(x, state.x_prev_c if state is not None else None)
+    kk = dense_apply(p["wk"], _lerp(x, xs, p["mu_k"]))
+    kk = jnp.square(jax.nn.relu(kk))
+    rr = jax.nn.sigmoid(dense_apply(p["wr"], _lerp(x, xs, p["mu_r"])))
+    return rr * dense_apply(p["wv"], kk), x[:, -1:]
+
+
+def rwkv6_layer_apply(p, x, cfg, state: RWKVState | None = None, chunk: int = RWKV_CHUNK):
+    """One self-contained RWKV6 layer: ln1 + time-mix + ln2 + channel-mix.
+
+    Token-shift state crosses both sublayers, so the layer owns its norms.
+    Returns (x_out, new_state).
+    """
+    from .blocks import layernorm_apply
+
+    xn = layernorm_apply(p["ln1"], x, cfg.norm_eps)
+    y, st = rwkv6_time_mix(p["tm"], xn, cfg, state, chunk=chunk)
+    x = x + y
+    xn2 = layernorm_apply(p["ln2"], x, cfg.norm_eps)
+    y2, x_prev_c = rwkv6_channel_mix(p["cm"], xn2, cfg, state)
+    x = x + y2
+    return x, RWKVState(x_prev_t=st.x_prev_t, x_prev_c=x_prev_c, S=st.S)
+
+
+def rwkv6_init_state(cfg, B, dtype=jnp.float32) -> RWKVState:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    return RWKVState(
+        x_prev_t=jnp.zeros((B, 1, d), jnp.bfloat16),
+        x_prev_c=jnp.zeros((B, 1, d), jnp.bfloat16),
+        S=jnp.zeros((B, H, dh, dh), dtype),
+    )

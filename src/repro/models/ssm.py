@@ -1,0 +1,163 @@
+"""Selective SSM (Mamba) block — pure JAX, chunked scan, decode state.
+
+The recurrence h_t = a_t ⊙ h_{t-1} + b_t (diagonal, data-dependent) shares
+the chunk-parallel skeleton with the HLA monoids (paper §4 "connection to
+linear attention"): intra-chunk ``associative_scan``, inter-chunk ``lax.scan``
+carry.  The 4-D (B, w, d_inner, d_state) tensors are only ever materialized
+per chunk (DESIGN.md §4 memory note).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .blocks import dense_apply, dense_specs
+from .param import Spec
+
+
+def _first_order_op(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a2 * a1, a2 * b1 + b2
+
+
+def chunked_linear_recurrence(a, b, h0, chunk: int = 128):
+    """h_t = a_t * h_{t-1} + b_t along axis 1.  a, b: (B, n, ...).
+
+    Returns (h (B, n, ...), h_final).  Exact; intra-chunk associative scan,
+    inter-chunk sequential carry.
+    """
+    B, n = a.shape[:2]
+    w = min(chunk, n)
+    assert n % w == 0
+    nc = n // w
+    ac = jnp.moveaxis(a.reshape((B, nc, w) + a.shape[2:]), 1, 0)
+    bc = jnp.moveaxis(b.reshape((B, nc, w) + b.shape[2:]), 1, 0)
+
+    def body(h, ab):
+        a_, b_ = ab  # (B, w, ...)
+        A, Bv = jax.lax.associative_scan(_first_order_op, (a_, b_), axis=1)
+        h_t = A * h[:, None] + Bv
+        return h_t[:, -1], h_t
+
+    hf, hs = jax.lax.scan(body, h0, (ac, bc))
+    h = jnp.moveaxis(hs, 0, 1).reshape((B, n) + a.shape[2:])
+    return h, hf
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, d_inner) rolling conv inputs
+    h: jax.Array  # (B, d_inner, d_state)
+
+
+def mamba_specs(cfg):
+    d = cfg.d_model
+    mc = cfg.mamba
+    d_in = mc.expand * d
+    dt_rank = mc.dt_rank or max(1, d // 16)
+    return {
+        "in_proj": dense_specs(d, 2 * d_in, axes=("embed", "inner")),
+        "conv_w": Spec((mc.d_conv, d_in), ("conv", "inner"), init="normal"),
+        "conv_b": Spec((d_in,), ("inner",), init="zeros"),
+        "x_proj": dense_specs(d_in, dt_rank + 2 * mc.d_state, axes=("inner", None)),
+        "dt_proj": {
+            "kernel": Spec((dt_rank, d_in), (None, "inner")),
+            "bias": Spec((d_in,), ("inner",), init="constant", const=0.54),
+        },
+        "A_log": Spec((d_in, mc.d_state), ("inner", "state"), init="constant", const=0.0),
+        "D": Spec((d_in,), ("inner",), init="ones"),
+        "out_proj": dense_specs(d_in, d, axes=("inner", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, prepend=None):
+    """x: (B, n, D); w: (K, D) depthwise.  Causal (left) padding."""
+    K = w.shape[0]
+    if prepend is None:
+        prepend = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prepend, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4): unrolled taps
+        out = out + xp[:, i : i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+    return out + b.astype(x.dtype), xp[:, -(K - 1) :] if K > 1 else prepend
+
+
+def mamba_apply(p, x, cfg, state: MambaState | None = None, chunk: int = 128):
+    """x: (B, n, d).  Returns (y, new_state)."""
+    B, n, d = x.shape
+    mc = cfg.mamba
+    d_in = mc.expand * d
+    ds = mc.d_state
+
+    xz = constrain(dense_apply(p["in_proj"], x), ("batch", None, "inner"))
+    xin = constrain(xz[..., :d_in], ("batch", None, "inner"))
+    z = constrain(xz[..., d_in:], ("batch", None, "inner"))
+    conv_prepend = state.conv if state is not None else None
+    xc, conv_tail = _causal_depthwise_conv(
+        xin, p["conv_w"], p["conv_b"], prepend=conv_prepend
+    )
+    xc = constrain(jax.nn.silu(xc), ("batch", None, "inner"))
+
+    proj = dense_apply(p["x_proj"], xc)
+    dt_rank = p["dt_proj"]["kernel"].shape[0]
+    dt = proj[..., :dt_rank]
+    Bc = proj[..., dt_rank : dt_rank + ds].astype(jnp.float32)
+    Cc = proj[..., dt_rank + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dense_apply(p["dt_proj"], dt).astype(jnp.float32)
+    )  # (B, n, d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (d_in, ds)
+
+    w = min(chunk, n)
+    pad = 0
+    if n % w:
+        pad = w - n % w
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        xcp = jnp.pad(xc.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    else:
+        xcp = xc.astype(jnp.float32)
+    npad = n + pad
+    nc = npad // w
+
+    h0 = (
+        state.h.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, d_in, ds), jnp.float32)
+    )
+
+    dtc = jnp.moveaxis(dt.reshape(B, nc, w, d_in), 1, 0)
+    Bcc = jnp.moveaxis(Bc.reshape(B, nc, w, ds), 1, 0)
+    Ccc = jnp.moveaxis(Cc.reshape(B, nc, w, ds), 1, 0)
+    xcc = jnp.moveaxis(xcp.reshape(B, nc, w, d_in), 1, 0)
+
+    def body(h, inp):
+        dt_, B_, C_, x_ = inp  # (B, w, .)
+        decay = jnp.exp(dt_[..., None] * A[None, None])  # (B, w, d_in, ds)
+        bu = (dt_ * x_)[..., None] * B_[:, :, None, :]
+        Acum, Bcum = jax.lax.associative_scan(_first_order_op, (decay, bu), axis=1)
+        hseq = Acum * h[:, None] + Bcum
+        y = jnp.einsum("bwds,bws->bwd", hseq, C_)
+        return hseq[:, -1], y
+
+    hf, ys = jax.lax.scan(body, h0, (dtc, Bcc, Ccc, xcc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, npad, d_in)[:, :n]
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)
+    new_state = MambaState(conv=conv_tail.astype(x.dtype), h=hf)
+    return out, new_state
+
+
+def mamba_init_state(cfg, B, dtype=jnp.float32) -> MambaState:
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    return MambaState(
+        conv=jnp.zeros((B, mc.d_conv - 1, d_in), jnp.bfloat16),
+        h=jnp.zeros((B, d_in, mc.d_state), dtype),
+    )

@@ -1,0 +1,222 @@
+"""Whisper-style encoder-decoder backbone (audio arch, conv frontend stub).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, enc_frames, d_model) — the conv
+subsampler is out of scope.  Encoder is bidirectional (softmax; HLA is
+strictly causal — DESIGN.md §Arch-applicability), decoder supports either
+softmax or an HLA mixer for causal self-attention; cross-attention stays
+softmax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mixer as mixer_mod
+from .blocks import (
+    embed_apply,
+    layernorm_apply,
+    layernorm_specs,
+    mlp_apply,
+    mlp_specs,
+    sinusoidal_pos,
+    unembed_apply,
+)
+from .lm import _maybe_remat, _stack_specs
+from ..distributed.sharding import constrain as _constrain
+from .param import Spec
+
+
+def _enc_layer_specs(cfg):
+    return {
+        "ln1": layernorm_specs(cfg.d_model),
+        "attn": attn_mod.attention_specs(cfg),
+        "ln2": layernorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def _dec_layer_specs(cfg):
+    s = {
+        "ln1": layernorm_specs(cfg.d_model),
+        "ln_x": layernorm_specs(cfg.d_model),
+        "cross_q": attn_mod.attention_specs(cfg),  # wq/wo used; wk/wv unused
+        "cross_kv": attn_mod.cross_kv_specs(cfg),
+        "ln2": layernorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, "gelu"),
+    }
+    if cfg.mixer == "softmax":
+        s["self"] = attn_mod.attention_specs(cfg)
+    else:
+        s["self_mixer"] = mixer_mod.mixer_specs(cfg)
+    return s
+
+
+def whisper_specs(cfg):
+    return {
+        "embed": {
+            "embedding": Spec(
+                (cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed",
+                scale=0.02,
+            )
+        },
+        "pos_embed": Spec(
+            (4096, cfg.d_model), (None, "embed"), init="embed", scale=0.01
+        ),
+        "enc_layers": _stack_specs(_enc_layer_specs(cfg), cfg.enc_layers),
+        "enc_norm": layernorm_specs(cfg.d_model),
+        "dec_layers": _stack_specs(_dec_layer_specs(cfg), cfg.n_layers),
+        "dec_norm": layernorm_specs(cfg.d_model),
+    }
+
+
+def whisper_encode(params, frames, cfg):
+    """frames: (B, ne, d_model) precomputed embeddings (stub frontend)."""
+    act = jnp.dtype(cfg.dtype)
+    B, ne, _ = frames.shape
+    x = frames.astype(act) + sinusoidal_pos(ne, cfg.d_model, act)[None]
+
+    def body(carry, p):
+        x = carry
+        x = _constrain(x, ("batch", "seq", "embed"))
+        h = layernorm_apply(p["ln1"], x, cfg.norm_eps)
+        y, _ = attn_mod.attention_apply(
+            p["attn"], h, cfg, causal=False, use_rope=False
+        )
+        x = x + y
+        h = layernorm_apply(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h, "gelu")
+        return x, 0.0
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layernorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+
+def whisper_decode(
+    params, tokens, enc_out, cfg, *, states=None, positions=None,
+    mode: str = "train",
+):
+    """Decoder over tokens; cross-attends to enc_out.  Returns
+    (logits, new_states, aux)."""
+    act = jnp.dtype(cfg.dtype)
+    B, n = tokens.shape
+    if positions is None:
+        positions = jnp.arange(n)[None, :]
+    x = embed_apply(params["embed"], tokens).astype(act)
+    # clip into the learned table (long_500k decode wraps the stub table)
+    pos_idx = jnp.clip(positions[0], 0, params["pos_embed"].shape[0] - 1)
+    pos = jnp.take(params["pos_embed"], pos_idx, axis=0).astype(act)
+    x = x + pos[None]
+
+    collect = mode in ("prefill", "decode")
+
+    def body(carry, inp):
+        x = carry
+        x = _constrain(x, ("batch", "seq", "embed"))
+        p = inp["params"]
+        st = inp.get("state")
+        h = layernorm_apply(p["ln1"], x, cfg.norm_eps)
+        if cfg.mixer == "softmax":
+            cache = st["self"] if st is not None else None
+            y, new_self = attn_mod.attention_apply(
+                p["self"], h, cfg, positions=positions, cache=cache,
+                use_rope=False,
+            )
+        else:
+            if mode == "decode":
+                y, new_self = mixer_mod.mixer_step(
+                    p["self_mixer"], h, st["self"], cfg
+                )
+            else:
+                y, new_self = mixer_mod.mixer_apply(
+                    p["self_mixer"], h, cfg, want_state=(mode == "prefill")
+                )
+        x = x + y
+        # cross attention (non-causal over encoder output); at prefill the
+        # cross K/V are computed fresh from the encoder (the passed state
+        # holds zeros) and RETURNED for decode
+        h = layernorm_apply(p["ln_x"], x, cfg.norm_eps)
+        if mode == "decode":
+            ck, cv = st["cross_k"], st["cross_v"]
+        else:
+            ck, cv = attn_mod.cross_kv_apply(p["cross_kv"], enc_out, cfg)
+        y, _ = attn_mod.attention_apply(
+            p["cross_q"], h, cfg, cross_kv=(ck, cv), use_rope=False
+        )
+        x = x + y
+        h = layernorm_apply(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h, "gelu")
+        ys = (
+            {"self": new_self, "cross_k": ck, "cross_v": cv} if collect else 0.0
+        )
+        return x, ys
+
+    body = _maybe_remat(body, cfg)
+    xs = {"params": params["dec_layers"]}
+    if states is not None:
+        xs["state"] = states
+    x, new_states = jax.lax.scan(body, x, xs)
+    x = layernorm_apply(params["dec_norm"], x, cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x)  # tied
+    return logits, (new_states if collect else None), jnp.zeros((), jnp.float32)
+
+
+def whisper_apply(
+    params, tokens, frames, cfg, *, states=None, positions=None, mode="train",
+    prefill_cache_margin: int = 64,
+):
+    if mode == "decode":
+        # frames unused: encoder K/V live in states
+        return whisper_decode(
+            params, tokens, None, cfg, states=states, positions=positions,
+            mode=mode,
+        )
+    if mode == "prefill" and states is None:
+        # allocate self KV caches (+ margin for subsequent decode) so the
+        # prefill actually fills them
+        states = whisper_init_states(
+            cfg, tokens.shape[0], tokens.shape[1] + prefill_cache_margin
+        )
+    enc_out = whisper_encode(params, frames, cfg)
+    return whisper_decode(
+        params, tokens, enc_out, cfg, states=states, positions=positions,
+        mode=mode,
+    )
+
+
+def whisper_init_states(cfg, B, max_len):
+    """Decode states: self KV cache (or mixer state) + cross K/V buffers."""
+    if cfg.mixer == "softmax":
+        self_st = attn_mod.init_kv_cache(B, cfg.n_kv_heads, max_len, cfg.head_dim)
+    else:
+        self_st = mixer_mod.mixer_init_state(cfg, B)
+    one = {
+        "self": self_st,
+        "cross_k": jnp.zeros(
+            (B, cfg.n_kv_heads, cfg.enc_frames, cfg.head_dim), jnp.bfloat16
+        ),
+        "cross_v": jnp.zeros(
+            (B, cfg.n_kv_heads, cfg.enc_frames, cfg.head_dim), jnp.bfloat16
+        ),
+    }
+    L = cfg.n_layers
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), one
+    )
+
+
+def whisper_loss(params, tokens, labels, frames, cfg):
+    logits, _, aux = whisper_apply(params, tokens, frames, cfg, mode="train")
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux, (ce, aux)

@@ -1,0 +1,99 @@
+"""AdamW + cosine schedule + global-norm clipping — built from scratch.
+
+Pure-pytree implementation (no optax in the image).  Master weights and
+moments in fp32; works with ZeRO-1 sharded optimizer state (the sharding
+is decided by ``distributed.sharding.opt_state_shardings``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: Any  # pytree like params (fp32)
+    nu: Any  # pytree like params (fp32)
+
+
+def init_opt_state(params, moment_dtype=jnp.float32) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, moment_dtype)  # noqa: E731
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+    )
+
+
+def cosine_lr(step, cfg: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, state: OptState, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(
+        lambda g: g.astype(jnp.promote_types(g.dtype, jnp.float32)), grads
+    )
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(step, cfg)
+    b1, b2 = cfg.betas
+    mu = jax.tree.map(
+        lambda m, g: (b1 * m.astype(g.dtype) + (1 - b1) * g).astype(m.dtype),
+        state.mu, grads,
+    )
+    nu = jax.tree.map(
+        lambda v, g: (b2 * v.astype(g.dtype) + (1 - b2) * g * g).astype(v.dtype),
+        state.nu, grads,
+    )
+    bc1 = 1 - b1**step.astype(jnp.float32)
+    bc2 = 1 - b2**step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        ct = jnp.promote_types(p.dtype, jnp.float32)
+        mhat = m.astype(ct) / bc1
+        vhat = v.astype(ct) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(ct)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p32
+        return (p32 - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step, mu, nu), {"lr": lr, "grad_norm": gnorm}

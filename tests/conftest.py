@@ -1,0 +1,27 @@
+import os
+
+# Tests run single-device (the dry-run sets its own device count in a
+# subprocess).  Force deterministic, quiet CPU execution.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)  # oracles at fp64 in tests
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+def make_qkv(rng, B=2, H=2, n=24, d=6, dv=5, scale=0.5, dtype=np.float64):
+    import jax.numpy as jnp
+
+    q = jnp.asarray(rng.randn(B, H, n, d) * scale, dtype)
+    k = jnp.asarray(rng.randn(B, H, n, d) * scale, dtype)
+    v = jnp.asarray(rng.randn(B, H, n, dv) * scale, dtype)
+    gam = jnp.asarray(rng.uniform(0.85, 0.99, (B, H)), dtype)
+    return q, k, v, gam

@@ -1,0 +1,60 @@
+"""AHLA: equivalence of views (paper Thm 6.1, Eq 6.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ahla import (
+    AHLAState,
+    ahla_chunkwise,
+    ahla_naive,
+    ahla_scan,
+    ahla_serial,
+)
+from conftest import make_qkv
+
+TOL = dict(atol=1e-9, rtol=1e-8)
+
+
+@pytest.mark.parametrize("use_gamma", [False, True])
+@pytest.mark.parametrize("normalize", [False, True])
+def test_all_views_agree(rng, use_gamma, normalize):
+    q, k, v, gam = make_qkv(rng)
+    gamma = gam if use_gamma else None
+    o0 = ahla_naive(q, k, v, gamma, normalize=normalize)
+    o1, s1 = ahla_serial(q, k, v, gamma, normalize=normalize)
+    o2, s2 = ahla_scan(q, k, v, gamma, normalize=normalize)
+    o3, s3 = ahla_chunkwise(q, k, v, gamma, chunk=8, normalize=normalize)
+    for o in (o1, o2, o3):
+        np.testing.assert_allclose(o, o0, **TOL)
+    for s in (s2, s3):
+        for f in AHLAState._fields:
+            np.testing.assert_allclose(getattr(s, f), getattr(s1, f), **TOL)
+
+
+def test_matches_masked_matrix_power(rng):
+    """Eq. (6.1): o_t = row_t[(A A) V], A = L . (Q K^T)."""
+    q, k, v, _ = make_qkv(rng, B=1, H=1, n=16)
+    n = q.shape[-2]
+    L = jnp.tril(jnp.ones((n, n)))
+    A = jnp.einsum("bhtd,bhjd->bhtj", q, k) * L
+    AA = jnp.einsum("bhti,bhij->bhtj", A, A)
+    o_ref = jnp.einsum("bhtj,bhje->bhte", AA, v)
+    o, _ = ahla_serial(q, k, v)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_carry_continuation(rng):
+    q, k, v, gam = make_qkv(rng)
+    o_full, s_full = ahla_serial(q, k, v, gam)
+    cut = 9
+    o_a, st = ahla_chunkwise(
+        q[..., :cut, :], k[..., :cut, :], v[..., :cut, :], gam, chunk=4
+    )
+    o_b, s_b = ahla_chunkwise(
+        q[..., cut:, :], k[..., cut:, :], v[..., cut:, :], gam, chunk=5,
+        state=st,
+    )
+    np.testing.assert_allclose(jnp.concatenate([o_a, o_b], -2), o_full, **TOL)
+    for f in AHLAState._fields:
+        np.testing.assert_allclose(getattr(s_b, f), getattr(s_full, f), **TOL)

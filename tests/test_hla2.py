@@ -1,0 +1,138 @@
+"""HLA2: equivalence of all four computation views (paper Thm 3.1 / 4.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hla2 import (
+    HLA2State,
+    hla2_chunkwise,
+    hla2_naive,
+    hla2_scan,
+    hla2_serial,
+    hla2_step,
+    hla2_init_state,
+)
+from conftest import make_qkv
+
+TOL = dict(atol=1e-8, rtol=1e-8)
+
+
+@pytest.mark.parametrize("use_gamma", [False, True])
+@pytest.mark.parametrize("normalize", [False, True])
+@pytest.mark.parametrize("lam", [0.0, 0.3])
+def test_all_views_agree(rng, use_gamma, normalize, lam):
+    q, k, v, gam = make_qkv(rng)
+    gamma = gam if use_gamma else None
+    o0 = hla2_naive(q, k, v, gamma, normalize=normalize, lam=lam)
+    o1, s1 = hla2_serial(q, k, v, gamma, normalize=normalize, lam=lam)
+    o2, s2 = hla2_scan(q, k, v, gamma, normalize=normalize, lam=lam)
+    o3, s3 = hla2_chunkwise(q, k, v, gamma, chunk=8, normalize=normalize, lam=lam)
+    o4, _ = hla2_chunkwise(q, k, v, gamma, chunk=7, normalize=normalize, lam=lam)
+    for o in (o1, o2, o3, o4):
+        np.testing.assert_allclose(o, o0, **TOL)
+    for s in (s2, s3):
+        for f in HLA2State._fields:
+            np.testing.assert_allclose(getattr(s, f), getattr(s1, f), **TOL)
+
+
+def test_unnormalized_matches_masked_matrix_form(rng):
+    """Direct check of Theorem 3.1: o_t = row_t[((W W^T) . L) V]."""
+    q, k, v, _ = make_qkv(rng, B=1, H=1, n=16)
+    n = q.shape[-2]
+    L = jnp.tril(jnp.ones((n, n)))
+    W = jnp.einsum("bhtd,bhjd->bhtj", q, k) * L
+    T2 = jnp.einsum("bhti,bhji->bhtj", W, W) * L
+    o_ref = jnp.einsum("bhtj,bhje->bhte", T2, v)
+    o, _ = hla2_serial(q, k, v)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_carry_state_continuation(rng):
+    q, k, v, gam = make_qkv(rng)
+    o_full, s_full = hla2_serial(q, k, v, gam)
+    cut = 10
+    o_a, st = hla2_chunkwise(
+        q[..., :cut, :], k[..., :cut, :], v[..., :cut, :], gam, chunk=5
+    )
+    o_b, s_b = hla2_chunkwise(
+        q[..., cut:, :], k[..., cut:, :], v[..., cut:, :], gam, chunk=7,
+        state=st,
+    )
+    np.testing.assert_allclose(
+        jnp.concatenate([o_a, o_b], -2), o_full, **TOL
+    )
+    for f in HLA2State._fields:
+        np.testing.assert_allclose(getattr(s_b, f), getattr(s_full, f), **TOL)
+    # scan path accepts the same carry
+    o_b2, _ = hla2_scan(
+        q[..., cut:, :], k[..., cut:, :], v[..., cut:, :], gam, state=st
+    )
+    np.testing.assert_allclose(o_b2, o_full[..., cut:, :], **TOL)
+
+
+def test_decode_step_matches_sequence(rng):
+    """Streaming one-token decode (view A) reproduces full-sequence rows."""
+    q, k, v, gam = make_qkv(rng, n=12)
+    o_full, _ = hla2_serial(q, k, v, gam, normalize=True)
+    st = hla2_init_state(q.shape[:-2], q.shape[-1], v.shape[-1], jnp.float64)
+    outs = []
+    for t in range(q.shape[-2]):
+        st, o_t = hla2_step(
+            st, q[..., t, :], k[..., t, :], v[..., t, :], gam, normalize=True
+        )
+        outs.append(o_t)
+    np.testing.assert_allclose(jnp.stack(outs, -2), o_full, **TOL)
+
+
+@pytest.mark.parametrize("impl", ["serial", "scan", "chunkwise"])
+def test_gradients_agree_with_naive(rng, impl):
+    from repro.core.hla2 import hla2
+
+    q, k, v, gam = make_qkv(rng, n=16)
+
+    def loss_with(fn):
+        def f(args):
+            q_, k_, v_ = args
+            out = fn(q_, k_, v_)
+            return jnp.sum(out**2)
+
+        return jax.grad(f)((q, k, v))
+
+    g_ref = loss_with(lambda a, b, c: hla2_naive(a, b, c, gam, normalize=True))
+    g = loss_with(
+        lambda a, b, c: hla2(a, b, c, gam, impl=impl, chunk=8, normalize=True)[0]
+    )
+    for x, y in zip(g, g_ref):
+        np.testing.assert_allclose(x, y, atol=1e-7, rtol=1e-6)
+
+
+def test_linear_attention_reduction(rng):
+    """Paper §3 'Connection with linear attention': S^K = I reduces the
+    normalized output to first-order linear attention with kernel q_t.q_i."""
+    q, k, v, _ = make_qkv(rng, n=12)
+    n, d = q.shape[-2], q.shape[-1]
+    # emulate S_t == I by patching the streaming formulas directly:
+    # num_t = q_t^T C_t, den_t = q_t^T m_t.
+    L = jnp.tril(jnp.ones((n, n)))
+    Wqq = jnp.einsum("bhtd,bhjd->bhtj", q, q) * L
+    o_ref = jnp.einsum("bhtj,bhje->bhte", Wqq, v) / (
+        jnp.sum(Wqq, -1)[..., None] + 1e-6
+    )
+    # lam-only path (S = 0 via zero keys) with lam = 1 gives exactly that
+    o, _ = hla2_serial(q, jnp.zeros_like(k), v, None, normalize=True, lam=1.0)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_bf16_inputs_fp32_state(rng):
+    q, k, v, gam = make_qkv(rng, dtype=np.float32)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    o_ref, _ = hla2_chunkwise(q, k, v, gam, chunk=8)
+    o_b, st = hla2_chunkwise(qb, kb, vb, gam, chunk=8)
+    assert o_b.dtype == jnp.bfloat16
+    assert st.S.dtype == jnp.float32  # state accumulates in fp32
+    # bf16 inputs quantize; just require the result to be close-ish
+    np.testing.assert_allclose(
+        np.asarray(o_b, np.float32), np.asarray(o_ref), atol=0.2, rtol=0.2
+    )

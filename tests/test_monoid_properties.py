@@ -1,0 +1,159 @@
+"""Property tests (hypothesis): associativity / identity / scan-prefix laws.
+
+Includes the two documented errata: the paper's printed decay-aware
+concatenations (HLA2 masked ⊕_γ, AHLA ⊕_AHLA-γ) are NOT associative; the
+corrected operators used by this framework are.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.monoid import (
+    AHLADecayState,
+    HLA2DecayState,
+    HLA3ScanState,
+    ahla_op_decay,
+    ahla_op_decay_paper,
+    masked_op_decay,
+    masked_op_decay_paper,
+    hla3_op,
+)
+
+D, DV = 3, 2
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand_hla2(rs):
+    return HLA2DecayState(
+        S=jnp.asarray(rs.randn(D, D)),
+        C=jnp.asarray(rs.randn(D, DV)),
+        m=jnp.asarray(rs.randn(D)),
+        G=jnp.asarray(rs.randn(D, DV)),
+        h=jnp.asarray(rs.randn(D)),
+        rho=jnp.asarray(rs.uniform(0.5, 0.99)),
+    )
+
+
+def _rand_ahla(rs):
+    return AHLADecayState(
+        R=jnp.asarray(rs.randn(D, D)),
+        P=jnp.asarray(rs.randn(D, DV)),
+        m=jnp.asarray(rs.randn(D)),
+        E=jnp.asarray(rs.randn(D, DV)),
+        n=jnp.asarray(rs.randn(D)),
+        rho=jnp.asarray(rs.uniform(0.5, 0.99)),
+    )
+
+
+def _rand_hla3(rs):
+    return HLA3ScanState(
+        SK=jnp.asarray(rs.randn(D, D)),
+        SQ=jnp.asarray(rs.randn(D, D)),
+        P=jnp.asarray(rs.randn(D, DV)),
+        m=jnp.asarray(rs.randn(D)),
+        F=jnp.asarray(rs.randn(D, DV)),
+        eta=jnp.asarray(rs.randn(D)),
+        RQP=jnp.asarray(rs.randn(D, DV)),
+        rQm=jnp.asarray(rs.randn(D)),
+        UKQ=jnp.asarray(rs.randn(D, D)),
+        W4=jnp.asarray(rs.randn(D, D, D, DV)),
+        W3=jnp.asarray(rs.randn(D, D, D)),
+    )
+
+
+def _assert_state_close(a, b, tol=1e-9):
+    for f in a._fields:
+        np.testing.assert_allclose(getattr(a, f), getattr(b, f), atol=tol, rtol=tol)
+
+
+def _assert_state_differs(a, b, min_diff=1e-6):
+    worst = max(
+        float(jnp.max(jnp.abs(getattr(a, f) - getattr(b, f)))) for f in a._fields
+    )
+    assert worst > min_diff
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_hla2_masked_decay_op_associative(seed):
+    rs = np.random.RandomState(seed)
+    x, y, z = _rand_hla2(rs), _rand_hla2(rs), _rand_hla2(rs)
+    _assert_state_close(
+        masked_op_decay(masked_op_decay(x, y), z),
+        masked_op_decay(x, masked_op_decay(y, z)),
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_hla2_masked_decay_identity(seed):
+    rs = np.random.RandomState(seed)
+    x = _rand_hla2(rs)
+    e = HLA2DecayState(
+        S=jnp.zeros((D, D)), C=jnp.zeros((D, DV)), m=jnp.zeros(D),
+        G=jnp.zeros((D, DV)), h=jnp.zeros(D), rho=jnp.asarray(1.0),
+    )
+    _assert_state_close(masked_op_decay(e, x), x)
+    _assert_state_close(masked_op_decay(x, e), x)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_erratum_paper_hla2_decay_op_not_associative(seed):
+    """The paper's printed ⊕_γ (Section 4.2) fails associativity."""
+    rs = np.random.RandomState(seed)
+    x, y, z = _rand_hla2(rs), _rand_hla2(rs), _rand_hla2(rs)
+    _assert_state_differs(
+        masked_op_decay_paper(masked_op_decay_paper(x, y), z),
+        masked_op_decay_paper(x, masked_op_decay_paper(y, z)),
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_ahla_decay_op_associative(seed):
+    rs = np.random.RandomState(seed)
+    x, y, z = _rand_ahla(rs), _rand_ahla(rs), _rand_ahla(rs)
+    _assert_state_close(
+        ahla_op_decay(ahla_op_decay(x, y), z),
+        ahla_op_decay(x, ahla_op_decay(y, z)),
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_erratum_paper_ahla_decay_op_not_associative(seed):
+    rs = np.random.RandomState(seed)
+    x, y, z = _rand_ahla(rs), _rand_ahla(rs), _rand_ahla(rs)
+    _assert_state_differs(
+        ahla_op_decay_paper(ahla_op_decay_paper(x, y), z),
+        ahla_op_decay_paper(x, ahla_op_decay_paper(y, z)),
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_hla3_op_associative(seed):
+    """⊗3 (Theorem 7.2) is associative — with materialized segment maps."""
+    rs = np.random.RandomState(seed)
+    x, y, z = _rand_hla3(rs), _rand_hla3(rs), _rand_hla3(rs)
+    _assert_state_close(
+        hla3_op(hla3_op(x, y), z), hla3_op(x, hla3_op(y, z)), tol=1e-8
+    )
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12))
+@settings(**SETTINGS)
+def test_scan_prefix_equals_serial_fold(seed, n):
+    """Exclusive-scan prefixes == left fold (Theorem 4.1 / Remark 4.2)."""
+    rs = np.random.RandomState(seed)
+    elems = [_rand_hla2(rs) for _ in range(n)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *elems)
+    inc = jax.lax.associative_scan(masked_op_decay, stacked, axis=0)
+    acc = elems[0]
+    for t in range(1, n):
+        acc = masked_op_decay(acc, elems[t])
+        got = jax.tree.map(lambda x: x[t], inc)
+        _assert_state_close(got, acc, tol=1e-8)

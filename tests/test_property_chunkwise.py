@@ -1,0 +1,74 @@
+"""Hypothesis sweep: chunkwise == serial for random shapes/chunks/decay.
+
+Catches ragged-tail padding, carry-state and per-head-decay edge cases
+beyond the fixed-shape tests (deliverable c: property tests on the
+system's invariants).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ahla import ahla_chunkwise, ahla_serial
+from repro.core.hla2 import hla2_chunkwise, hla2_serial
+from repro.core.hla3 import hla3_exact_chunkwise, hla3_exact_serial
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _mk(seed, n, d, dv, decay):
+    rs = np.random.RandomState(seed)
+    q = jnp.asarray(rs.randn(1, 2, n, d) * 0.5)
+    k = jnp.asarray(rs.randn(1, 2, n, d) * 0.5)
+    v = jnp.asarray(rs.randn(1, 2, n, dv) * 0.5)
+    g = jnp.asarray(rs.uniform(0.7, 0.999, (1, 2))) if decay else None
+    return q, k, v, g
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 33),  # n
+    st.sampled_from([1, 2, 3, 5, 8, 16]),  # chunk
+    st.sampled_from([2, 5, 8]),  # d
+    st.sampled_from([1, 3, 8]),  # dv
+    st.booleans(),  # decay
+    st.booleans(),  # normalize
+)
+@settings(**SETTINGS)
+def test_hla2_chunkwise_equals_serial(seed, n, chunk, d, dv, decay, norm):
+    q, k, v, g = _mk(seed, n, d, dv, decay)
+    o_s, st_s = hla2_serial(q, k, v, g, normalize=norm)
+    o_c, st_c = hla2_chunkwise(q, k, v, g, chunk=chunk, normalize=norm)
+    np.testing.assert_allclose(o_c, o_s, atol=1e-8, rtol=1e-7)
+    for a, b in zip(st_c, st_s):
+        np.testing.assert_allclose(a, b, atol=1e-8, rtol=1e-7)
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 25),
+    st.sampled_from([1, 3, 8]),
+    st.booleans(),
+)
+@settings(**SETTINGS)
+def test_ahla_chunkwise_equals_serial(seed, n, chunk, decay):
+    q, k, v, g = _mk(seed, n, 5, 4, decay)
+    o_s, st_s = ahla_serial(q, k, v, g)
+    o_c, st_c = ahla_chunkwise(q, k, v, g, chunk=chunk)
+    np.testing.assert_allclose(o_c, o_s, atol=1e-8, rtol=1e-7)
+    for a, b in zip(st_c, st_s):
+        np.testing.assert_allclose(a, b, atol=1e-8, rtol=1e-7)
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 20),
+    st.sampled_from([1, 4, 7]),
+    st.booleans(),
+)
+@settings(**SETTINGS)
+def test_hla3_exact_chunkwise_equals_serial(seed, n, chunk, decay):
+    q, k, v, g = _mk(seed, n, 4, 3, decay)
+    o_s, _ = hla3_exact_serial(q, k, v, g)
+    o_c, _ = hla3_exact_chunkwise(q, k, v, g, chunk=chunk)
+    np.testing.assert_allclose(o_c, o_s, atol=1e-8, rtol=1e-7)

@@ -1,0 +1,51 @@
+"""Serving loop + paper-faithful scan-impl equivalence tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.param import init_params
+
+
+def test_scan_impl_matches_chunkwise(rng):
+    """mixer impl='scan' (paper Blelloch path) == impl='chunkwise'."""
+    cfg_c = get_config("hla-1b", reduced=True)
+    cfg_s = cfg_c.replace(hla=dataclasses.replace(cfg_c.hla, impl="scan"))
+    specs = lm.lm_specs(cfg_c)
+    params = init_params(specs, jax.random.key(0))
+    tokens = jnp.asarray(rng.randint(0, cfg_c.vocab, (2, 16)))
+    lc, _, _ = lm.lm_apply(params, tokens, cfg_c)
+    ls, _, _ = lm.lm_apply(params, tokens, cfg_s)
+    np.testing.assert_allclose(
+        np.asarray(lc, np.float32), np.asarray(ls, np.float32),
+        atol=1e-3, rtol=1e-3,
+    )
+
+
+def test_server_continuous_batching(rng):
+    """Slots admit/recycle; per-slot state reset isolates requests."""
+    from repro.launch.serve import Server
+
+    cfg = get_config("hla-1b", reduced=True)
+    params = init_params(lm.lm_specs(cfg), jax.random.key(0))
+    srv = Server(cfg, params, slots=2, max_len=32)
+
+    prompt_a = rng.randint(2, cfg.vocab, 5)
+    prompt_b = rng.randint(2, cfg.vocab, 5)
+    srv.admit(0, prompt_a)
+    srv.admit(1, prompt_b)
+    for _ in range(4):
+        srv.step()
+    out_a1 = list(srv.outputs[0])
+
+    # recycle slot 0 with the same prompt: outputs must reproduce exactly
+    # (state reset works) even though slot 1 keeps decoding
+    srv.admit(0, prompt_a)
+    for _ in range(4):
+        srv.step()
+    assert srv.outputs[0] == out_a1
+    assert len(srv.outputs[1]) == 8  # slot 1 never stalled
