@@ -77,6 +77,36 @@ def load_results():
     return rows
 
 
+def render_train_step():
+    """§Train-step table from results/train_step.json (benchmarks.run)."""
+    path = os.path.join(RESULTS, "train_step.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    sh = r["shape"]
+    out = [
+        "\n### §Train-step — fwd+bwd per step "
+        f"(backend={r['backend']}, B={sh['B']} H={sh['H']} n={sh['n']} "
+        f"d={sh['d']} chunk={sh['chunk']})\n",
+        "| path | us/step | tok/s |",
+        "|---|---|---|",
+    ]
+    for name, e in r["entries"].items():
+        out.append(f"| {name} | {e['us_per_step']:.1f} | {e['tok_per_s']} |")
+    ent = r["entries"]
+    if "hla2_fused" in ent and "hla2_recompute" in ent:
+        sp = ent["hla2_recompute"]["us_per_step"] / max(
+            ent["hla2_fused"]["us_per_step"], 1e-9
+        )
+        out.append(
+            f"\nhla2 fused-bwd speedup over recompute-in-backward: "
+            f"**{sp:.2f}x** (interpret-mode numbers on CPU are not "
+            "indicative — compare on TPU)"
+        )
+    return "\n".join(out)
+
+
 def render(rows):
     out = []
     out.append("### §Dry-run — compile results (every arch x shape x mesh)\n")
@@ -128,6 +158,9 @@ def main():
     args = ap.parse_args()
     rows = load_results()
     text = render(rows)
+    ts = render_train_step()
+    if ts:
+        text = text + "\n" + ts
     print(text)
     if args.md:
         with open(args.md, "w") as f:

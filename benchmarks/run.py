@@ -7,18 +7,25 @@ Prints ``name,us_per_call,derived`` CSV rows.  The paper is algorithmic
   timing of each view);
 * §5 complexity (linear time, O(1) state)  — `complexity` (us/token vs n),
   `statesize` (state bytes vs n, constant);
-* §4 chunk-parallel training — `chunkwidth` (throughput vs w);
+* §4 chunk-parallel training — `chunkwidth` (throughput vs w), and
+  `train_step` (fwd+bwd us/step: fused Pallas VJP with chunk-state
+  checkpointing vs recompute-in-backward vs jnp reference; persisted to
+  ``results/train_step.json`` for `benchmarks.report`);
 * the multi-pod roofline table is produced by `benchmarks.roofline`
   (separate long-running driver) and summarized by `benchmarks.report`.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
 def _timeit(fn, *args, iters=5, warmup=2):
@@ -140,6 +147,63 @@ def bench_kernels(rows):
     rows.append(("kernels/hla2_chunk_ref", us, f"pallas_interpret_err={err:.2e}"))
 
 
+def bench_train_step(rows):
+    """Training-step (fwd+bwd) timing: fused Pallas VJP vs reference paths.
+
+    ``*_fused`` runs the chunkwise Pallas forward with chunk-state
+    checkpointing and the fused reverse-chunk-walk backward;
+    ``*_recompute`` is the legacy design (fused forward, jnp recompute
+    under ``jax.vjp`` in the backward); ``*_ref`` is the pure-jnp chunkwise
+    path end to end.  On CPU the kernels execute in interpret mode (Python
+    body per grid step), so the XLA-compiled ``*_ref`` row is the relevant
+    CPU number — on TPU the same entries time the native kernels.
+
+    Results are also dumped to ``results/train_step.json`` so
+    ``benchmarks.report`` can track the training-throughput trajectory.
+    """
+    from repro.kernels.ops import ahla_attention, hla2_attention
+
+    rng = np.random.RandomState(4)
+    B, H, n, d = 1, 2, 512, 32
+    q, k, v, g = _mk(rng, B, H, n, d)
+
+    def make_loss(fn, **kw):
+        def loss(a, b, c, gg):
+            return jnp.sum(fn(a, b, c, gg, chunk=64, **kw) ** 2)
+
+        return loss
+
+    entries = {
+        "hla2_fused": make_loss(hla2_attention, use_pallas=True,
+                                fused_bwd=True),
+        "hla2_recompute": make_loss(hla2_attention, use_pallas=True,
+                                    fused_bwd=False),
+        "hla2_ref": make_loss(hla2_attention, use_pallas=False),
+        "ahla_fused": make_loss(ahla_attention, use_pallas=True,
+                                fused_bwd=True),
+        "ahla_ref": make_loss(ahla_attention, use_pallas=False),
+    }
+    backend = jax.default_backend()
+    results = {}
+    for name, loss in entries.items():
+        step = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
+        us = _timeit(step, q, k, v, g, iters=3, warmup=1)
+        tok_s = B * n / us * 1e6  # tokens (not head-tokens) per second
+        rows.append((
+            f"train_step/{name}", us,
+            f"tok_per_s={tok_s:.0f} backend={backend}",
+        ))
+        results[name] = {"us_per_step": round(us, 1),
+                         "tok_per_s": round(tok_s)}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "train_step.json"), "w") as f:
+        json.dump({
+            "backend": backend,
+            "shape": {"B": B, "H": H, "n": n, "d": d, "chunk": 64},
+            "entries": results,
+        }, f, indent=1)
+
+
 def bench_decode_throughput(rows):
     """Streaming decode (view A): us/token for the reduced paper model."""
     from repro.configs import get_config
@@ -177,6 +241,7 @@ def main() -> None:
     bench_statesize(rows)
     bench_chunkwidth(rows)
     bench_kernels(rows)
+    bench_train_step(rows)
     bench_decode_throughput(rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas kernels for the chunk-parallel HLA operators.
+
+Layout:
+
+* ``chunk_math.py`` — per-chunk forward math as pure functions, shared by
+  the forward kernels, the backward kernels (via ``jax.vjp``), and the
+  pure-jnp oracles;
+* ``hla2_chunk.py`` / ``ahla_chunk.py`` — Pallas forward + backward
+  kernels with chunk-level state checkpointing;
+* ``ops.py`` — jit'd ``(B, H, n, d)`` wrappers with ``custom_vjp`` wiring
+  (the public API below);
+* ``ref.py`` — reference semantics / test oracles.
+"""
+
+from .ops import ahla_attention, hla2_attention
+
+__all__ = ["ahla_attention", "hla2_attention"]

@@ -1,10 +1,15 @@
-"""Fused chunkwise AHLA forward — Pallas TPU kernel.
+"""Fused chunkwise AHLA — Pallas TPU kernels (fwd + bwd).
 
 AHLA = LinAttn o LinAttn (DESIGN.md §2): both passes are fused in one
 kernel so the intermediate first-order outputs ``r`` never leave VMEM.
 The carry ``(P | m, E | n)`` (den columns augmented) persists in VMEM
 scratch across the sequential chunk axis.  Grid/BlockSpec layout mirrors
-``hla2_chunk.py``.
+``hla2_chunk.py``, as does the training path (DESIGN.md §3): the forward
+can checkpoint each chunk's incoming ``(P, E)`` to HBM and
+``ahla_chunk_bwd_pallas`` walks the chunks in reverse, recomputing the
+intra-chunk tiles via ``jax.vjp`` of the shared per-chunk math while the
+state cotangents live in VMEM scratch.  Arbitrary sequence lengths are
+handled by zero-padding to a chunk multiple in the wrappers.
 """
 
 from __future__ import annotations
@@ -16,7 +21,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .hla2_chunk import _decay_mats
+from .chunk_math import ahla_chunk_math
+from .hla2_chunk import _compiler_params, _pad_chunk_multiple
+
+
+def _unscale_padded_state(Pa, Ea, gamma, pad: int):
+    """Phantom zero-tokens only decay the AHLA carry (all at rate gamma):
+    divide the spurious gamma^pad back out."""
+    if gamma is None or pad == 0:
+        return Pa, Ea
+    inv = jnp.power(gamma.astype(jnp.float32), -float(pad))[:, None, None]
+    return Pa * inv, Ea * inv
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
 
 
 def _ahla_chunk_kernel(
@@ -27,15 +47,18 @@ def _ahla_chunk_kernel(
     o_ref,  # (1, w, dv)
     P_out,  # (1, d, dv+1)   [P | m]
     E_out,  # (1, d, dv+1)   [E | n]
-    P,  # scratch (d, dv+1)
-    E,  # scratch (d, dv+1)
-    *,
+    *rest,
     w: int,
     normalize: bool,
     eps: float,
     has_decay: bool,
     n_chunks: int,
+    save_states: bool,
 ):
+    if save_states:
+        Pc_out, Ec_out, P, E = rest
+    else:
+        P, E = rest
     c = pl.program_id(1)
     f32 = jnp.float32
 
@@ -47,34 +70,18 @@ def _ahla_chunk_kernel(
     Q = q_ref[0].astype(f32)
     K = k_ref[0].astype(f32)
     V = v_ref[0].astype(f32)
-    Vb = jnp.concatenate([V, jnp.ones((w, 1), f32)], axis=-1)
-
     g = gamma_ref[0, 0].astype(f32) if has_decay else jnp.ones((), f32)
-    Lg, pow_t, pow_rev, mask = _decay_mats(w, g, f32)
 
-    dot = functools.partial(jax.lax.dot_general, preferred_element_type=f32)
-    mm = lambda a, b: dot(a, b, (((1,), (0,)), ((), ())))  # noqa: E731
-    mmT = lambda a, b: dot(a, b, (((1,), (1,)), ((), ())))  # noqa: E731
+    state0 = (P[...], E[...])
+    if save_states:
+        Pc_out[0, 0] = state0[0]
+        Ec_out[0, 0] = state0[1]
 
-    P0, E0 = P[...], E[...]
-    A = mmT(Q, K) * Lg
-    AV = mm(A, Vb)  # local first-order outputs
-    r = pow_t[:, None] * mm(Q, P0) + AV  # carry-inclusive r_t | s_t
-    o_aug = pow_t[:, None] * mm(Q, E0) + mm(A, r)
-    if normalize:
-        o = o_aug[:, :-1] / (o_aug[:, -1:] + eps)
-    else:
-        o = o_aug[:, :-1]
+    o, state1 = ahla_chunk_math(
+        Q, K, V, state0, g, normalize=normalize, eps=eps
+    )
     o_ref[0, :, :] = o.astype(o_ref.dtype)
-
-    rho = jnp.exp(jnp.log(g) * w)
-    Kg = pow_rev[:, None] * K
-    KgT_ = lambda X: dot(Kg, X, (((0,), (0,)), ((), ())))  # noqa: E731
-    R = dot(K, Q, (((0,), (0,)), ((), ())))  # (d, d) = sum_t k_t q_t^T (undecayed)
-    P_new = rho * P0 + KgT_(Vb)
-    E_new = rho * E0 + KgT_(AV) + rho * mm(R, P0)
-    P[...] = P_new
-    E[...] = E_new
+    P[...], E[...] = state1
 
     @pl.when(c == n_chunks - 1)
     def _write_state():
@@ -92,13 +99,20 @@ def ahla_chunk_pallas(
     normalize: bool = False,
     eps: float = 1e-6,
     interpret: bool | None = None,
+    save_chunk_states: bool = False,
 ):
-    """Fused AHLA forward.  Returns (o, (P, m, E, n))."""
+    """Fused AHLA forward.  Returns ``(o, (P, m, E, n))``, plus the
+    per-chunk incoming ``([P|m], [E|n])`` checkpoints (``(BH, nc, d, dv+1)``)
+    when ``save_chunk_states=True``.  Arbitrary ``n`` is zero-padded to a
+    chunk multiple and sliced back."""
     BH, n, d = q.shape
     dv = v.shape[-1]
     w = min(chunk, n)
-    assert n % w == 0, "pad sequences to a multiple of the chunk width"
-    nc = n // w
+    pad = (-n) % w
+    if pad:
+        q, k, v = _pad_chunk_multiple(n, w, q, k, v)
+    np_ = n + pad
+    nc = np_ // w
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     has_decay = gamma is not None
@@ -114,12 +128,13 @@ def ahla_chunk_pallas(
         eps=eps,
         has_decay=has_decay,
         n_chunks=nc,
+        save_states=save_chunk_states,
     )
-    out_shape = (
-        jax.ShapeDtypeStruct((BH, n, dv), v.dtype),
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, np_, dv), v.dtype),
         jax.ShapeDtypeStruct((BH, d, dv + 1), jnp.float32),
         jax.ShapeDtypeStruct((BH, d, dv + 1), jnp.float32),
-    )
+    ]
     grid = (BH, nc)
     in_specs = [
             pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
@@ -132,17 +147,20 @@ def ahla_chunk_pallas(
             pl.BlockSpec((1, d, dv + 1), lambda i, c: (i, 0, 0)),
             pl.BlockSpec((1, d, dv + 1), lambda i, c: (i, 0, 0)),
     ]
+    if save_chunk_states:
+        out_shape += [
+            jax.ShapeDtypeStruct((BH, nc, d, dv + 1), jnp.float32)
+            for _ in range(2)
+        ]
+        out_specs += [
+            pl.BlockSpec((1, 1, d, dv + 1), lambda i, c: (i, c, 0, 0))
+            for _ in range(2)
+        ]
     scratch_shapes = [
         pltpu.VMEM((d, dv + 1), jnp.float32),
         pltpu.VMEM((d, dv + 1), jnp.float32),
     ]
-    compiler_params = None
-    if not interpret:
-        _CP = getattr(pltpu, "CompilerParams", None) or getattr(
-            pltpu, "TPUCompilerParams"
-        )
-        compiler_params = _CP(dimension_semantics=("parallel", "arbitrary"))
-    o, Pa, Ea = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
@@ -150,6 +168,169 @@ def ahla_chunk_pallas(
         out_shape=out_shape,
         scratch_shapes=scratch_shapes,
         interpret=interpret,
-        compiler_params=compiler_params,
+        compiler_params=_compiler_params(interpret),
     )(gamma_in, q, k, v)
-    return o, (Pa[..., :dv], Pa[..., dv], Ea[..., :dv], Ea[..., dv])
+    o, Pa, Ea = outs[:3]
+    o = o[:, :n]
+    Pa, Ea = _unscale_padded_state(Pa, Ea, gamma, pad)
+    state = (Pa[..., :dv], Pa[..., dv], Ea[..., :dv], Ea[..., dv])
+    if save_chunk_states:
+        return o, state, tuple(outs[3:])
+    return o, state
+
+
+# --------------------------------------------------------------------------
+# backward
+# --------------------------------------------------------------------------
+
+
+def _ahla_chunk_bwd_kernel(
+    gamma_ref,  # (1, 1)
+    q_ref,  # (1, w, d)  — chunk nc-1-c (reversed walk)
+    k_ref,
+    v_ref,
+    Pc_ref,  # (1, 1, d, dv+1) checkpointed incoming [P|m]
+    Ec_ref,  # (1, 1, d, dv+1) checkpointed incoming [E|n]
+    do_ref,  # (1, w, dv)
+    dq_ref,
+    dk_ref,
+    dv_ref,
+    dg_ref,  # (1, 1)
+    dP,  # scratch (d, dv+1) f32 — state cotangents
+    dE,  # scratch (d, dv+1) f32
+    dg_acc,  # scratch (1, 1) f32
+    *,
+    w: int,
+    normalize: bool,
+    eps: float,
+    has_decay: bool,
+    n_chunks: int,
+):
+    c = pl.program_id(1)
+    f32 = jnp.float32
+
+    @pl.when(c == 0)
+    def _init():
+        dP[...] = jnp.zeros_like(dP)
+        dE[...] = jnp.zeros_like(dE)
+        dg_acc[...] = jnp.zeros_like(dg_acc)
+
+    Q = q_ref[0].astype(f32)
+    K = k_ref[0].astype(f32)
+    V = v_ref[0].astype(f32)
+    dO = do_ref[0].astype(f32)
+    state0 = (Pc_ref[0, 0], Ec_ref[0, 0])
+    dstate1 = (dP[...], dE[...])
+
+    if has_decay:
+        g = gamma_ref[0, 0].astype(f32)
+        _, vjp = jax.vjp(
+            functools.partial(ahla_chunk_math, normalize=normalize, eps=eps),
+            Q, K, V, state0, g,
+        )
+        dQ, dK, dV, dstate0, dgc = vjp((dO, dstate1))
+        dg_acc[0, 0] += dgc
+    else:
+        one = jnp.ones((), f32)
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_, st_: ahla_chunk_math(
+                q_, k_, v_, st_, one, normalize=normalize, eps=eps
+            ),
+            Q, K, V, state0,
+        )
+        dQ, dK, dV, dstate0 = vjp((dO, dstate1))
+
+    dq_ref[0] = dQ.astype(dq_ref.dtype)
+    dk_ref[0] = dK.astype(dk_ref.dtype)
+    dv_ref[0] = dV.astype(dv_ref.dtype)
+    dP[...], dE[...] = dstate0
+
+    @pl.when(c == n_chunks - 1)
+    def _write_dg():
+        dg_ref[0, 0] = dg_acc[0, 0]
+
+
+def ahla_chunk_bwd_pallas(
+    q: jax.Array,  # (BH, n, d)
+    k: jax.Array,
+    v: jax.Array,
+    gamma: jax.Array | None,
+    do: jax.Array,  # (BH, n, dv)
+    chunk_states,  # ([P|m], [E|n]) checkpoints from the forward
+    *,
+    chunk: int = 128,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    interpret: bool | None = None,
+):
+    """Fused AHLA backward (reverse chunk walk).  Returns (dq, dk, dv, dgamma)."""
+    BH, n, d = q.shape
+    dv_ = v.shape[-1]
+    w = min(chunk, n)
+    pad = (-n) % w
+    if pad:
+        q, k, v, do = _pad_chunk_multiple(n, w, q, k, v, do)
+    np_ = n + pad
+    nc = np_ // w
+    assert chunk_states[0].shape[1] == nc, (
+        "chunk_states do not match the (padded) chunk grid; pass the tuple "
+        "returned by ahla_chunk_pallas(save_chunk_states=True) unchanged"
+    )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    has_decay = gamma is not None
+    gamma_in = (
+        jnp.ones((BH, 1), jnp.float32)
+        if gamma is None
+        else gamma.reshape(BH, 1).astype(jnp.float32)
+    )
+    kernel = functools.partial(
+        _ahla_chunk_bwd_kernel,
+        w=w,
+        normalize=normalize,
+        eps=eps,
+        has_decay=has_decay,
+        n_chunks=nc,
+    )
+    grid = (BH, nc)
+    rev_blk = lambda i, c: (i, nc - 1 - c, 0)  # noqa: E731
+    rev_st = lambda i, c: (i, nc - 1 - c, 0, 0)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, dv_), rev_blk),
+        pl.BlockSpec((1, 1, d, dv_ + 1), rev_st),
+        pl.BlockSpec((1, 1, d, dv_ + 1), rev_st),
+        pl.BlockSpec((1, w, dv_), rev_blk),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, dv_), rev_blk),
+        pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, np_, d), q.dtype),
+        jax.ShapeDtypeStruct((BH, np_, d), k.dtype),
+        jax.ShapeDtypeStruct((BH, np_, dv_), v.dtype),
+        jax.ShapeDtypeStruct((BH, 1), jnp.float32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((d, dv_ + 1), jnp.float32),
+        pltpu.VMEM((d, dv_ + 1), jnp.float32),
+        pltpu.VMEM((1, 1), jnp.float32),
+    ]
+    dq, dk, dv, dg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+        compiler_params=_compiler_params(interpret),
+    )(gamma_in, q, k, v, *chunk_states, do)
+    dq, dk, dv = dq[:, :n], dk[:, :n], dv[:, :n]
+    dgamma = dg[:, 0] if has_decay else None
+    return dq, dk, dv, dgamma

@@ -1,6 +1,6 @@
-"""Fused chunkwise masked second-order HLA forward — Pallas TPU kernel.
+"""Fused chunkwise masked second-order HLA — Pallas TPU kernels (fwd + bwd).
 
-Design (DESIGN.md §2, hardware adaptation):
+Design (DESIGN.md §2 / §3, hardware adaptation):
 
 * Grid ``(BH, n_chunks)`` with ``dimension_semantics=("parallel",
   "arbitrary")``: the batch×head axis parallelizes across cores, the chunk
@@ -12,12 +12,25 @@ Design (DESIGN.md §2, hardware adaptation):
 * bf16/fp32 inputs; all accumulation in fp32 via ``preferred_element_type``.
 * Per-(batch,head) scalar decay ``gamma``; masks are built in-kernel with
   ``broadcasted_iota`` (no host-side (w, w) constants shipped per head).
+* **Training** (``save_chunk_states=True``): the forward additionally spills
+  each chunk's *incoming* state to HBM — ``nc ×`` constant-size state, the
+  classic checkpointing trade.  ``hla2_chunk_bwd_pallas`` then walks the
+  chunk axis in reverse over the same grid, recomputes the intra-chunk
+  tiles from ``q/k/v`` + the checkpointed state via ``jax.vjp`` of the
+  shared per-chunk math (``chunk_math.py``), and carries the reverse-mode
+  state cotangents in VMEM scratch — one fused backward, no second
+  XLA-scheduled forward.
+* Arbitrary sequence lengths: inputs are zero-padded to a chunk multiple
+  in the wrappers and outputs sliced back (final-state decay attenuation
+  from the phantom tokens is divided back out).
 
 VMEM budget at d = dv = 128, w = 256, fp32:
   state 3*(128*128) + 2*128 floats ~ 197 KB; blocks q/k/v/o 4*(256*128)
   ~ 512 KB; intra tiles (w,w) 3*(256*256) ~ 768 KB  => well under 16 MB.
+The backward adds the 5 cotangent state buffers (~197 KB) and the VJP's
+transposed intra tiles — still comfortably inside VMEM.
 
-The container is CPU-only: tests run this kernel with ``interpret=True``
+The container is CPU-only: tests run these kernels with ``interpret=True``
 (the kernel body executes in Python) against ``ref.py``; on TPU hardware
 the same ``pl.pallas_call`` lowers natively.
 """
@@ -31,19 +44,54 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .chunk_math import decay_mats, hla2_chunk_math
 
-def _decay_mats(w: int, g, dtype):
-    """In-kernel L_gamma, g^(t+1), g^(w-1-t) from scalar g (g=1 => plain L)."""
-    t = jax.lax.broadcasted_iota(jnp.int32, (w, w), 0)
-    j = jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
-    diff = (t - j).astype(dtype)
-    mask = t >= j
-    logg = jnp.log(g)
-    Lg = jnp.where(mask, jnp.exp(diff * logg), jnp.zeros((), dtype))
-    tv = jax.lax.iota(dtype, w)
-    pow_t = jnp.exp((tv + 1.0) * logg)  # g^t for t=1..w
-    pow_rev = jnp.exp((w - 1.0 - tv) * logg)  # g^(w-t) for t=1..w
-    return Lg, pow_t, pow_rev, mask
+# Back-compat alias (ahla_chunk and older call sites import it from here).
+_decay_mats = decay_mats
+
+
+def _state_shapes(d: int, dv: int):
+    return ((d, d), (d, dv), (1, d), (d, dv), (1, d))
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    _CP = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return _CP(dimension_semantics=("parallel", "arbitrary"))
+
+
+def _pad_chunk_multiple(n: int, w: int, *arrays):
+    """Zero-pad time axis (axis 1) of each (BH, n, ·) array to a multiple of w."""
+    pad = (-n) % w
+    if pad == 0:
+        return arrays
+    return tuple(
+        jnp.pad(a, ((0, 0), (0, pad), (0, 0))) for a in arrays
+    )
+
+
+def _unscale_padded_state(state, gamma, pad: int):
+    """Undo the spurious gamma^pad decay phantom zero-tokens apply to the
+    final carry (gamma^2pad on the cross summaries G, h)."""
+    if gamma is None or pad == 0:
+        return state
+    inv = jnp.power(gamma.astype(jnp.float32), -float(pad))
+    S, C, m, G, h = state
+    return (
+        S * inv[:, None, None],
+        C * inv[:, None, None],
+        m * inv[:, None],
+        G * (inv**2)[:, None, None],
+        h * (inv**2)[:, None],
+    )
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
 
 
 def _hla2_chunk_kernel(
@@ -52,27 +100,23 @@ def _hla2_chunk_kernel(
     q_ref,  # (1, w, d)
     k_ref,  # (1, w, d)
     v_ref,  # (1, w, dv)
-    # outputs
+    # outputs: o, final state (5), then per-chunk states (5) iff save_states
     o_ref,  # (1, w, dv)
-    S_out,  # (1, d, d)
-    C_out,  # (1, d, dv)
-    m_out,  # (1, 1, d)
-    G_out,  # (1, d, dv)
-    h_out,  # (1, 1, d)
-    # scratch (persist across the sequential chunk axis)
-    S,  # (d, d) f32
-    C,  # (d, dv) f32
-    m,  # (1, d) f32
-    G,  # (d, dv) f32
-    h,  # (1, d) f32
-    *,
+    *rest,
     w: int,
     normalize: bool,
     eps: float,
     lam: float,
     has_decay: bool,
     n_chunks: int,
+    save_states: bool,
 ):
+    if save_states:
+        (S_out, C_out, m_out, G_out, h_out,
+         Sc_out, Cc_out, mc_out, Gc_out, hc_out,
+         S, C, m, G, h) = rest
+    else:
+        (S_out, C_out, m_out, G_out, h_out, S, C, m, G, h) = rest
     c = pl.program_id(1)
     f32 = jnp.float32
 
@@ -87,72 +131,26 @@ def _hla2_chunk_kernel(
     Q = q_ref[0].astype(f32)  # (w, d)
     K = k_ref[0].astype(f32)
     V = v_ref[0].astype(f32)
-
     if has_decay:
         g = gamma_ref[0, 0].astype(f32)
     else:
         g = jnp.ones((), f32)
-    Lg, pow_t, pow_rev, mask = _decay_mats(w, g, f32)
-    t = jax.lax.broadcasted_iota(jnp.int32, (w, w), 0)
-    j = jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
-    U = (t <= j).astype(f32)  # i <= j (upper incl)
-    Ls = (t > j).astype(f32)  # strict lower
 
-    S0, C0, m0, G0, h0 = S[...], C[...], m[...], G[...], h[...]
+    state0 = (S[...], C[...], m[...], G[...], h[...])
+    if save_states:
+        # checkpoint the *incoming* state — exactly what the reverse walk
+        # needs to recompute this chunk.
+        Sc_out[0, 0] = state0[0]
+        Cc_out[0, 0] = state0[1]
+        mc_out[0, 0] = state0[2]
+        Gc_out[0, 0] = state0[3]
+        hc_out[0, 0] = state0[4]
 
-    dot = functools.partial(jax.lax.dot_general, preferred_element_type=f32)
-    mm = lambda a, b: dot(a, b, (((1,), (0,)), ((), ())))  # noqa: E731
-    mmT = lambda a, b: dot(a, b, (((1,), (1,)), ((), ())))  # noqa: E731  a @ b.T
-
-    A = mmT(Q, K) * Lg  # (w, w)   (QK^T) . Lg
-    Bm = mmT(K, Q) * U  # B[i, j] = (k_i . q_j) masked i<=j
-    M3 = mm(A, Bm) * Lg
-    QS0 = mm(Q, S0)  # (w, d)
-    QS0Q = mmT(QS0, Q) * Lg
-
-    D0 = mm(S0, C0) - G0  # (d, dv)
-    T1 = (pow_t**2)[:, None] * mm(Q, D0)
-    T2 = pow_t[:, None] * mm(QS0Q, V)
-    T3 = mm(M3, V)
-    num = T1 + T2 + T3
-    if lam:
-        Wqq = mmT(Q, Q) * Lg
-        num = num + lam * (pow_t[:, None] * mm(Q, C0) + mm(Wqq, V))
-    if normalize:
-        d0v = mm(S0, m0.T) - h0.T  # (d, 1)
-        den = (
-            (pow_t**2)[:, None] * mm(Q, d0v)
-            + pow_t[:, None] * jnp.sum(QS0Q, -1, keepdims=True)
-            + jnp.sum(M3, -1, keepdims=True)
-        )
-        if lam:
-            den = den + lam * (
-                pow_t[:, None] * mm(Q, m0.T) + jnp.sum(Wqq, -1, keepdims=True)
-            )
-        o = num / (den + eps)
-    else:
-        o = num
+    o, state1 = hla2_chunk_math(
+        Q, K, V, state0, g, normalize=normalize, eps=eps, lam=lam
+    )
     o_ref[0, :, :] = o.astype(o_ref.dtype)
-
-    # ---- carry update (monoid, B = whole chunk) ----
-    rho = jnp.exp(jnp.log(g) * w)
-    Kg = pow_rev[:, None] * K
-    Qg = pow_rev[:, None] * Q
-    Sw = dot(Kg, K, (((0,), (0,)), ((), ())))  # (d, d)
-    Cw = dot(Qg, V, (((0,), (0,)), ((), ())))  # (d, dv)
-    mw = jnp.sum(Qg, 0, keepdims=True)  # (1, d)
-    N = mmT(K, Q) * Ls
-    Vg = pow_rev[:, None] * V
-    NVg = mm(N, Vg)
-    Gw = dot(Kg, NVg, (((0,), (0,)), ((), ())))
-    Nmg = jnp.sum(N * pow_rev[None, :], -1, keepdims=True)  # (w, 1)
-    hw = dot(Nmg, Kg, (((0,), (0,)), ((), ())))  # (1, d)
-
-    S[...] = rho * S0 + Sw
-    C[...] = rho * C0 + Cw
-    m[...] = rho * m0 + mw
-    G[...] = rho**2 * G0 + Gw + rho * mm(Sw, C0)
-    h[...] = rho**2 * h0 + hw + rho * mm(m0, Sw.T)
+    S[...], C[...], m[...], G[...], h[...] = state1
 
     @pl.when(c == n_chunks - 1)
     def _write_state():
@@ -174,13 +172,24 @@ def hla2_chunk_pallas(
     eps: float = 1e-6,
     lam: float = 0.0,
     interpret: bool | None = None,
+    save_chunk_states: bool = False,
 ):
-    """Fused forward.  Returns (o, (S, C, m, G, h)) final state per row."""
+    """Fused forward.  Returns ``(o, (S, C, m, G, h))`` final state per row,
+    plus the per-chunk incoming-state checkpoint tuple (shapes
+    ``(BH, nc, ...)``) when ``save_chunk_states=True``.
+
+    Arbitrary ``n``: inputs are zero-padded up to a chunk multiple and the
+    output sliced back to ``n`` (the checkpoint tuple keeps the padded
+    chunk count — feed it unchanged to ``hla2_chunk_bwd_pallas``).
+    """
     BH, n, d = q.shape
     dv = v.shape[-1]
     w = min(chunk, n)
-    assert n % w == 0, "pad sequences to a multiple of the chunk width"
-    nc = n // w
+    pad = (-n) % w
+    if pad:
+        q, k, v = _pad_chunk_multiple(n, w, q, k, v)
+    np_ = n + pad
+    nc = np_ // w
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     has_decay = gamma is not None
@@ -197,15 +206,14 @@ def hla2_chunk_pallas(
         lam=lam,
         has_decay=has_decay,
         n_chunks=nc,
+        save_states=save_chunk_states,
     )
-    out_shape = (
-        jax.ShapeDtypeStruct((BH, n, dv), v.dtype),
-        jax.ShapeDtypeStruct((BH, d, d), jnp.float32),
-        jax.ShapeDtypeStruct((BH, d, dv), jnp.float32),
-        jax.ShapeDtypeStruct((BH, 1, d), jnp.float32),
-        jax.ShapeDtypeStruct((BH, d, dv), jnp.float32),
-        jax.ShapeDtypeStruct((BH, 1, d), jnp.float32),
-    )
+    state_shapes = _state_shapes(d, dv)
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, np_, dv), v.dtype),
+    ] + [
+        jax.ShapeDtypeStruct((BH,) + s, jnp.float32) for s in state_shapes
+    ]
     state_spec = lambda a, b: pl.BlockSpec(  # noqa: E731
         (1, a, b), lambda i, c: (i, 0, 0)
     )
@@ -218,26 +226,18 @@ def hla2_chunk_pallas(
     ]
     out_specs = [
             pl.BlockSpec((1, w, dv), lambda i, c: (i, c, 0)),
-            state_spec(d, d),
-            state_spec(d, dv),
-            state_spec(1, d),
-            state_spec(d, dv),
-            state_spec(1, d),
-    ]
-    scratch_shapes = [
-        pltpu.VMEM((d, d), jnp.float32),
-        pltpu.VMEM((d, dv), jnp.float32),
-        pltpu.VMEM((1, d), jnp.float32),
-        pltpu.VMEM((d, dv), jnp.float32),
-        pltpu.VMEM((1, d), jnp.float32),
-    ]
-    compiler_params = None
-    if not interpret:
-        _CP = getattr(pltpu, "CompilerParams", None) or getattr(
-            pltpu, "TPUCompilerParams"
-        )
-        compiler_params = _CP(dimension_semantics=("parallel", "arbitrary"))
-    o, S, C, m, G, h = pl.pallas_call(
+    ] + [state_spec(a, b) for a, b in state_shapes]
+    if save_chunk_states:
+        out_shape += [
+            jax.ShapeDtypeStruct((BH, nc) + s, jnp.float32)
+            for s in state_shapes
+        ]
+        out_specs += [
+            pl.BlockSpec((1, 1) + s, lambda i, c: (i, c, 0, 0))
+            for s in state_shapes
+        ]
+    scratch_shapes = [pltpu.VMEM(s, jnp.float32) for s in state_shapes]
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
@@ -245,6 +245,190 @@ def hla2_chunk_pallas(
         out_shape=out_shape,
         scratch_shapes=scratch_shapes,
         interpret=interpret,
-        compiler_params=compiler_params,
+        compiler_params=_compiler_params(interpret),
     )(gamma_in, q, k, v)
-    return o, (S, C, m[:, 0], G, h[:, 0])
+    o, S, C, m, G, h = outs[:6]
+    o = o[:, :n]
+    state = _unscale_padded_state((S, C, m[:, 0], G, h[:, 0]), gamma, pad)
+    if save_chunk_states:
+        return o, state, tuple(outs[6:])
+    return o, state
+
+
+# --------------------------------------------------------------------------
+# backward
+# --------------------------------------------------------------------------
+
+
+def _hla2_chunk_bwd_kernel(
+    # inputs
+    gamma_ref,  # (1, 1) f32
+    q_ref,  # (1, w, d)   — chunk nc-1-c (reversed walk)
+    k_ref,
+    v_ref,
+    Sc_ref,  # (1, 1, d, d)   checkpointed incoming state of this chunk
+    Cc_ref,  # (1, 1, d, dv)
+    mc_ref,  # (1, 1, 1, d)
+    Gc_ref,  # (1, 1, d, dv)
+    hc_ref,  # (1, 1, 1, d)
+    do_ref,  # (1, w, dv)
+    # outputs
+    dq_ref,  # (1, w, d)
+    dk_ref,
+    dv_ref,
+    dg_ref,  # (1, 1) f32
+    # scratch: reverse-mode state cotangents + dgamma accumulator
+    dS,  # (d, d) f32
+    dC,  # (d, dv)
+    dm,  # (1, d)
+    dG,  # (d, dv)
+    dh,  # (1, d)
+    dg_acc,  # (1, 1)
+    *,
+    w: int,
+    normalize: bool,
+    eps: float,
+    lam: float,
+    has_decay: bool,
+    n_chunks: int,
+):
+    c = pl.program_id(1)  # grid step; actual chunk index is nc-1-c
+    f32 = jnp.float32
+
+    @pl.when(c == 0)
+    def _init():
+        # the forward discards the final carry, so its cotangent is zero
+        dS[...] = jnp.zeros_like(dS)
+        dC[...] = jnp.zeros_like(dC)
+        dm[...] = jnp.zeros_like(dm)
+        dG[...] = jnp.zeros_like(dG)
+        dh[...] = jnp.zeros_like(dh)
+        dg_acc[...] = jnp.zeros_like(dg_acc)
+
+    Q = q_ref[0].astype(f32)
+    K = k_ref[0].astype(f32)
+    V = v_ref[0].astype(f32)
+    dO = do_ref[0].astype(f32)
+    state0 = (Sc_ref[0, 0], Cc_ref[0, 0], mc_ref[0, 0], Gc_ref[0, 0],
+              hc_ref[0, 0])
+    dstate1 = (dS[...], dC[...], dm[...], dG[...], dh[...])
+
+    if has_decay:
+        g = gamma_ref[0, 0].astype(f32)
+        _, vjp = jax.vjp(
+            functools.partial(
+                hla2_chunk_math, normalize=normalize, eps=eps, lam=lam
+            ),
+            Q, K, V, state0, g,
+        )
+        dQ, dK, dV, dstate0, dgc = vjp((dO, dstate1))
+        dg_acc[0, 0] += dgc
+    else:
+        one = jnp.ones((), f32)
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_, st_: hla2_chunk_math(
+                q_, k_, v_, st_, one, normalize=normalize, eps=eps, lam=lam
+            ),
+            Q, K, V, state0,
+        )
+        dQ, dK, dV, dstate0 = vjp((dO, dstate1))
+
+    dq_ref[0] = dQ.astype(dq_ref.dtype)
+    dk_ref[0] = dK.astype(dk_ref.dtype)
+    dv_ref[0] = dV.astype(dv_ref.dtype)
+    dS[...], dC[...], dm[...], dG[...], dh[...] = dstate0
+
+    @pl.when(c == n_chunks - 1)
+    def _write_dg():
+        dg_ref[0, 0] = dg_acc[0, 0]
+
+
+def hla2_chunk_bwd_pallas(
+    q: jax.Array,  # (BH, n, d)
+    k: jax.Array,
+    v: jax.Array,  # (BH, n, dv)
+    gamma: jax.Array | None,
+    do: jax.Array,  # (BH, n, dv) output cotangent
+    chunk_states,  # per-chunk incoming states from the forward (padded nc)
+    *,
+    chunk: int = 128,
+    normalize: bool = False,
+    eps: float = 1e-6,
+    lam: float = 0.0,
+    interpret: bool | None = None,
+):
+    """Fused backward: reverse chunk walk with checkpointed states.
+
+    Returns ``(dq, dk, dv, dgamma)`` (``dgamma`` is None iff gamma is None).
+    """
+    BH, n, d = q.shape
+    dv_ = v.shape[-1]
+    w = min(chunk, n)
+    pad = (-n) % w
+    if pad:
+        q, k, v, do = _pad_chunk_multiple(n, w, q, k, v, do)
+    np_ = n + pad
+    nc = np_ // w
+    assert chunk_states[0].shape[1] == nc, (
+        "chunk_states do not match the (padded) chunk grid; pass the tuple "
+        "returned by hla2_chunk_pallas(save_chunk_states=True) unchanged"
+    )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    has_decay = gamma is not None
+    gamma_in = (
+        jnp.ones((BH, 1), jnp.float32)
+        if gamma is None
+        else gamma.reshape(BH, 1).astype(jnp.float32)
+    )
+
+    kernel = functools.partial(
+        _hla2_chunk_bwd_kernel,
+        w=w,
+        normalize=normalize,
+        eps=eps,
+        lam=lam,
+        has_decay=has_decay,
+        n_chunks=nc,
+    )
+    state_shapes = _state_shapes(d, dv_)
+    grid = (BH, nc)
+    rev_blk = lambda i, c: (i, nc - 1 - c, 0)  # noqa: E731
+    rev_st = lambda i, c: (i, nc - 1 - c, 0, 0)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, c: (i, 0)),  # gamma
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, dv_), rev_blk),
+    ] + [
+        pl.BlockSpec((1, 1) + s, rev_st) for s in state_shapes
+    ] + [
+        pl.BlockSpec((1, w, dv_), rev_blk),  # do
+    ]
+    out_specs = [
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, d), rev_blk),
+        pl.BlockSpec((1, w, dv_), rev_blk),
+        pl.BlockSpec((1, 1), lambda i, c: (i, 0)),  # dgamma
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, np_, d), q.dtype),
+        jax.ShapeDtypeStruct((BH, np_, d), k.dtype),
+        jax.ShapeDtypeStruct((BH, np_, dv_), v.dtype),
+        jax.ShapeDtypeStruct((BH, 1), jnp.float32),
+    ]
+    scratch_shapes = [pltpu.VMEM(s, jnp.float32) for s in state_shapes]
+    scratch_shapes.append(pltpu.VMEM((1, 1), jnp.float32))
+    dq, dk, dv, dg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+        compiler_params=_compiler_params(interpret),
+    )(gamma_in, q, k, v, *chunk_states, do)
+    dq, dk, dv = dq[:, :n], dk[:, :n], dv[:, :n]
+    dgamma = dg[:, 0] if has_decay else None
+    return dq, dk, dv, dgamma

@@ -1,13 +1,29 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 ``hla2_attention`` / ``ahla_attention`` take model-layout tensors
-``(B, H, n, d)`` and dispatch to the fused Pallas kernel for the forward
-pass.  The backward pass is a ``custom_vjp`` that differentiates the
-bit-identical pure-jnp chunkwise reference (recompute-in-backward): the
-kernel and the reference compute the same math, so gradients are exact
-while the hot forward path stays fused.  ``use_pallas=False`` falls back to
-the reference end to end (used on CPU training runs; the kernel itself is
-exercised in interpret mode by the tests).
+``(B, H, n, d)`` and dispatch to the fused Pallas kernels for **both**
+passes of training:
+
+* **Forward**: the chunkwise kernel carries the inter-chunk state in VMEM
+  scratch; under differentiation it additionally spills each chunk's
+  *incoming* state tuple to HBM (``nc ×`` constant-size state — the
+  chunk-level checkpointing trade: O(n/w · d·dv) extra memory buys back a
+  full unfused recompute forward).
+* **Backward** (``fused_bwd=True``, the default): a second Pallas kernel
+  walks the chunk axis in reverse, recomputes the intra-chunk tiles from
+  ``q/k/v`` plus the checkpointed state, and accumulates ``dq/dk/dv/dgamma``
+  with the reverse-mode state cotangents living in VMEM scratch.  Gradients
+  are exact: the backward differentiates the *same* per-chunk math
+  (``chunk_math.py``) the forward kernel executes.
+* ``fused_bwd=False`` restores the legacy recompute-in-backward design
+  (``jax.vjp`` over the pure-jnp chunkwise reference — a second,
+  XLA-scheduled forward whose carried state round-trips through HBM).
+* ``use_pallas=False`` falls back to the reference end to end (used on CPU
+  training runs; the kernels themselves are exercised in interpret mode by
+  the tests).
+
+Arbitrary sequence lengths are supported: the kernel wrappers zero-pad to
+a chunk multiple and slice the results back.
 """
 
 from __future__ import annotations
@@ -18,8 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
-from .ahla_chunk import ahla_chunk_pallas
-from .hla2_chunk import hla2_chunk_pallas
+from .ahla_chunk import ahla_chunk_bwd_pallas, ahla_chunk_pallas
+from .hla2_chunk import hla2_chunk_bwd_pallas, hla2_chunk_pallas
 
 
 def _merge_bh(x):
@@ -27,10 +43,17 @@ def _merge_bh(x):
     return x.reshape((B * H,) + x.shape[2:]), B, H
 
 
+# --------------------------------------------------------------------------
+# HLA2
+# --------------------------------------------------------------------------
+
+
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8)
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9)
 )
-def _hla2_fwd_core(q, k, v, gamma, chunk, normalize, eps, lam, use_pallas):
+def _hla2_fwd_core(
+    q, k, v, gamma, chunk, normalize, eps, lam, use_pallas, fused_bwd
+):
     if use_pallas:
         qf, B, H = _merge_bh(q)
         kf, _, _ = _merge_bh(k)
@@ -46,14 +69,48 @@ def _hla2_fwd_core(q, k, v, gamma, chunk, normalize, eps, lam, use_pallas):
     return o
 
 
-def _hla2_vjp_fwd(q, k, v, gamma, chunk, normalize, eps, lam, use_pallas):
-    out = _hla2_fwd_core(q, k, v, gamma, chunk, normalize, eps, lam, use_pallas)
-    return out, (q, k, v, gamma)
+def _hla2_vjp_fwd(
+    q, k, v, gamma, chunk, normalize, eps, lam, use_pallas, fused_bwd
+):
+    if use_pallas and fused_bwd:
+        # fused training path: forward checkpoints per-chunk incoming states
+        qf, B, H = _merge_bh(q)
+        kf, _, _ = _merge_bh(k)
+        vf, _, _ = _merge_bh(v)
+        gf = None if gamma is None else gamma.reshape(B * H)
+        o, _, chunk_states = hla2_chunk_pallas(
+            qf, kf, vf, gf, chunk=chunk, normalize=normalize, eps=eps,
+            lam=lam, save_chunk_states=True,
+        )
+        out = o.reshape(q.shape[:2] + o.shape[1:])
+        return out, (q, k, v, gamma, chunk_states)
+    out = _hla2_fwd_core(
+        q, k, v, gamma, chunk, normalize, eps, lam, use_pallas, fused_bwd
+    )
+    return out, (q, k, v, gamma, None)
 
 
-def _hla2_vjp_bwd(chunk, normalize, eps, lam, use_pallas, res, g):
-    q, k, v, gamma = res
+def _hla2_vjp_bwd(chunk, normalize, eps, lam, use_pallas, fused_bwd, res, g):
+    q, k, v, gamma, chunk_states = res
 
+    if use_pallas and fused_bwd:
+        qf, B, H = _merge_bh(q)
+        kf, _, _ = _merge_bh(k)
+        vf, _, _ = _merge_bh(v)
+        gof, _, _ = _merge_bh(g)
+        gf = None if gamma is None else gamma.reshape(B * H)
+        dq, dk, dv, dgamma = hla2_chunk_bwd_pallas(
+            qf, kf, vf, gf, gof, chunk_states, chunk=chunk,
+            normalize=normalize, eps=eps, lam=lam,
+        )
+        unmerge = lambda x, p: x.reshape(p.shape).astype(p.dtype)  # noqa: E731
+        dgamma = (
+            None if gamma is None
+            else dgamma.reshape(gamma.shape).astype(gamma.dtype)
+        )
+        return unmerge(dq, q), unmerge(dk, k), unmerge(dv, v), dgamma
+
+    # legacy recompute-in-backward: differentiate the jnp chunkwise reference
     def f(q_, k_, v_, gamma_):
         o, _ = _ref.hla2_chunk_ref(
             q_, k_, v_, gamma_, chunk=chunk, normalize=normalize, eps=eps,
@@ -74,15 +131,22 @@ _hla2_fwd_core.defvjp(_hla2_vjp_fwd, _hla2_vjp_bwd)
 def hla2_attention(
     q, k, v, gamma=None, *, chunk: int = 128, normalize: bool = False,
     eps: float = 1e-6, lam: float = 0.0, use_pallas: bool = True,
+    fused_bwd: bool = True,
 ):
-    """Masked second-order HLA over (B, H, n, d) tensors (fused forward)."""
+    """Masked second-order HLA over (B, H, n, d) tensors (fused fwd + bwd)."""
     return _hla2_fwd_core(
-        q, k, v, gamma, chunk, normalize, eps, lam, use_pallas
+        q, k, v, gamma, chunk, normalize, eps, lam, use_pallas, fused_bwd
     )
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas):
+# --------------------------------------------------------------------------
+# AHLA
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas,
+                   fused_bwd):
     if use_pallas:
         qf, B, H = _merge_bh(q)
         kf, _, _ = _merge_bh(k)
@@ -98,13 +162,44 @@ def _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas):
     return o
 
 
-def _ahla_vjp_fwd(q, k, v, gamma, chunk, normalize, eps, use_pallas):
-    out = _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas)
-    return out, (q, k, v, gamma)
+def _ahla_vjp_fwd(q, k, v, gamma, chunk, normalize, eps, use_pallas,
+                  fused_bwd):
+    if use_pallas and fused_bwd:
+        qf, B, H = _merge_bh(q)
+        kf, _, _ = _merge_bh(k)
+        vf, _, _ = _merge_bh(v)
+        gf = None if gamma is None else gamma.reshape(B * H)
+        o, _, chunk_states = ahla_chunk_pallas(
+            qf, kf, vf, gf, chunk=chunk, normalize=normalize, eps=eps,
+            save_chunk_states=True,
+        )
+        out = o.reshape(q.shape[:2] + o.shape[1:])
+        return out, (q, k, v, gamma, chunk_states)
+    out = _ahla_fwd_core(
+        q, k, v, gamma, chunk, normalize, eps, use_pallas, fused_bwd
+    )
+    return out, (q, k, v, gamma, None)
 
 
-def _ahla_vjp_bwd(chunk, normalize, eps, use_pallas, res, g):
-    q, k, v, gamma = res
+def _ahla_vjp_bwd(chunk, normalize, eps, use_pallas, fused_bwd, res, g):
+    q, k, v, gamma, chunk_states = res
+
+    if use_pallas and fused_bwd:
+        qf, B, H = _merge_bh(q)
+        kf, _, _ = _merge_bh(k)
+        vf, _, _ = _merge_bh(v)
+        gof, _, _ = _merge_bh(g)
+        gf = None if gamma is None else gamma.reshape(B * H)
+        dq, dk, dv, dgamma = ahla_chunk_bwd_pallas(
+            qf, kf, vf, gf, gof, chunk_states, chunk=chunk,
+            normalize=normalize, eps=eps,
+        )
+        unmerge = lambda x, p: x.reshape(p.shape).astype(p.dtype)  # noqa: E731
+        dgamma = (
+            None if gamma is None
+            else dgamma.reshape(gamma.shape).astype(gamma.dtype)
+        )
+        return unmerge(dq, q), unmerge(dk, k), unmerge(dv, v), dgamma
 
     def f(q_, k_, v_, gamma_):
         o, _ = _ref.ahla_chunk_ref(
@@ -124,7 +219,9 @@ _ahla_fwd_core.defvjp(_ahla_vjp_fwd, _ahla_vjp_bwd)
 
 def ahla_attention(
     q, k, v, gamma=None, *, chunk: int = 128, normalize: bool = False,
-    eps: float = 1e-6, use_pallas: bool = True,
+    eps: float = 1e-6, use_pallas: bool = True, fused_bwd: bool = True,
 ):
-    """AHLA over (B, H, n, d) tensors (fused forward)."""
-    return _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas)
+    """AHLA over (B, H, n, d) tensors (fused fwd + bwd)."""
+    return _ahla_fwd_core(
+        q, k, v, gamma, chunk, normalize, eps, use_pallas, fused_bwd
+    )

@@ -1,16 +1,28 @@
 """Pure-jnp oracles for the Pallas kernels.
 
-The kernels compute the same chunkwise math as ``repro.core`` — these
-wrappers pin the exact reference semantics (shapes ``(BH, n, d)``) used by
-the per-kernel allclose tests and by the custom-VJP backward pass.
+Forward: the kernels compute the same chunkwise math as ``repro.core`` —
+these wrappers pin the exact reference semantics (shapes ``(BH, n, d)``)
+used by the per-kernel allclose tests.
+
+Backward: ``hla2_chunk_bwd_ref`` / ``ahla_chunk_bwd_ref`` mirror the fused
+backward kernels *structurally*: a forward ``lax.scan`` collects each
+chunk's incoming state (the checkpoints the kernel spills to HBM), then a
+reverse scan applies ``jax.vjp`` of the **same** shared per-chunk math
+(``chunk_math.py``) the kernels trace — so oracle and kernel are
+bit-identical by construction, vmapped over the batch×head axis instead of
+gridded over it.
 """
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from ..core.ahla import ahla_chunkwise
 from ..core.hla2 import hla2_chunkwise
+from .chunk_math import ahla_chunk_math, hla2_chunk_math
 
 
 def hla2_chunk_ref(
@@ -29,3 +41,115 @@ def ahla_chunk_ref(q, k, v, gamma=None, *, chunk=128, normalize=False, eps=1e-6)
         q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps
     )
     return o, (st.P, st.m, st.E, st.n)
+
+
+# --------------------------------------------------------------------------
+# chunk-level backward oracles (mirror the fused bwd kernels)
+# --------------------------------------------------------------------------
+
+
+def _chunked(x, nc, w):
+    return x.reshape(x.shape[0], nc, w, x.shape[-1])
+
+
+def _chunk_bwd_row(chunk_fn, init_state, zero_cotangent, has_decay):
+    """Per-(batch,head) chunk-level VJP: forward state collection + reverse
+    vjp walk.  ``chunk_fn(Q, K, V, state, g) -> (o, state')``."""
+
+    def row(q_r, k_r, v_r, do_r, g_r):  # (nc, w, ·) stacks, scalar g
+        def fwd_body(st, qkv):
+            o, st1 = chunk_fn(*qkv, st, g_r)
+            return st1, st  # carry the update, emit the *incoming* state
+
+        _, st_in = jax.lax.scan(fwd_body, init_state, (q_r, k_r, v_r))
+
+        def bwd_body(dst, args):
+            Q, K, V, dO, st0 = args
+            if has_decay:
+                _, vjp = jax.vjp(chunk_fn, Q, K, V, st0, g_r)
+                dQ, dK, dV, dst0, dg = vjp((dO, dst))
+            else:
+                _, vjp = jax.vjp(
+                    lambda a, b, c_, s: chunk_fn(a, b, c_, s, g_r), Q, K, V, st0
+                )
+                dQ, dK, dV, dst0 = vjp((dO, dst))
+                dg = jnp.zeros((), jnp.float32)
+            return dst0, (dQ, dK, dV, dg)
+
+        _, (dq_r, dk_r, dv_r, dg_parts) = jax.lax.scan(
+            bwd_body, zero_cotangent, (q_r, k_r, v_r, do_r, st_in),
+            reverse=True,
+        )
+        return dq_r, dk_r, dv_r, jnp.sum(dg_parts)
+
+    return row
+
+
+def hla2_chunk_bwd_ref(
+    q, k, v, gamma, do, *, chunk=128, normalize=False, eps=1e-6, lam=0.0
+):
+    """Chunk-level backward oracle for ``hla2_chunk_bwd_pallas``.
+
+    Shapes ``(BH, n, d)`` with ``n`` a chunk multiple.  Returns
+    ``(dq, dk, dv, dgamma)``; ``dgamma`` is None iff ``gamma`` is None.
+    """
+    BH, n, d = q.shape
+    dv = v.shape[-1]
+    w = min(chunk, n)
+    assert n % w == 0, "oracle expects pre-padded chunk-multiple sequences"
+    nc = n // w
+    f32 = jnp.float32
+    qc = _chunked(q.astype(f32), nc, w)
+    kc = _chunked(k.astype(f32), nc, w)
+    vc = _chunked(v.astype(f32), nc, w)
+    doc = _chunked(do.astype(f32), nc, w)
+    has_decay = gamma is not None
+    g = (
+        gamma.reshape(BH).astype(f32)
+        if has_decay
+        else jnp.ones((BH,), f32)
+    )
+    z = functools.partial(jnp.zeros, dtype=f32)
+    state0 = (z((d, d)), z((d, dv)), z((1, d)), z((d, dv)), z((1, d)))
+    chunk_fn = functools.partial(
+        hla2_chunk_math, normalize=normalize, eps=eps, lam=lam
+    )
+    row = _chunk_bwd_row(chunk_fn, state0, state0, has_decay)
+    dq, dk, dv_, dg = jax.vmap(row)(qc, kc, vc, doc, g)
+    dq = dq.reshape(BH, n, d).astype(q.dtype)
+    dk = dk.reshape(BH, n, d).astype(k.dtype)
+    dv_ = dv_.reshape(BH, n, dv).astype(v.dtype)
+    dgamma = dg.astype(gamma.dtype) if has_decay else None
+    return dq, dk, dv_, dgamma
+
+
+def ahla_chunk_bwd_ref(
+    q, k, v, gamma, do, *, chunk=128, normalize=False, eps=1e-6
+):
+    """Chunk-level backward oracle for ``ahla_chunk_bwd_pallas``."""
+    BH, n, d = q.shape
+    dv = v.shape[-1]
+    w = min(chunk, n)
+    assert n % w == 0, "oracle expects pre-padded chunk-multiple sequences"
+    nc = n // w
+    f32 = jnp.float32
+    qc = _chunked(q.astype(f32), nc, w)
+    kc = _chunked(k.astype(f32), nc, w)
+    vc = _chunked(v.astype(f32), nc, w)
+    doc = _chunked(do.astype(f32), nc, w)
+    has_decay = gamma is not None
+    g = (
+        gamma.reshape(BH).astype(f32)
+        if has_decay
+        else jnp.ones((BH,), f32)
+    )
+    z = functools.partial(jnp.zeros, dtype=f32)
+    state0 = (z((d, dv + 1)), z((d, dv + 1)))
+    chunk_fn = functools.partial(ahla_chunk_math, normalize=normalize, eps=eps)
+    row = _chunk_bwd_row(chunk_fn, state0, state0, has_decay)
+    dq, dk, dv_, dg = jax.vmap(row)(qc, kc, vc, doc, g)
+    dq = dq.reshape(BH, n, d).astype(q.dtype)
+    dk = dk.reshape(BH, n, d).astype(k.dtype)
+    dv_ = dv_.reshape(BH, n, dv).astype(v.dtype)
+    dgamma = dg.astype(gamma.dtype) if has_decay else None
+    return dq, dk, dv_, dgamma

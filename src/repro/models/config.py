@@ -31,6 +31,9 @@ class HLAConfig:
     lam: float = 0.0  # ridge (Alg 1)
     share_kv_state: bool = False  # §5.2 MQA/GQA S^K sharing
     use_pallas: bool = True  # fused kernel on TPU; jnp path on CPU
+    fused_bwd: bool = True  # fused Pallas backward with chunk-level state
+    #   checkpointing (DESIGN.md §3); False = legacy recompute-in-backward
+    #   (second unfused forward under jax.vjp — slower, slightly less HBM)
 
 
 @dataclasses.dataclass(frozen=True)

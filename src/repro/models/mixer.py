@@ -11,7 +11,9 @@ hla3_paper / linattn), with:
 * per-head RMS output norm (standard practice for unnormalized linear
   attention outputs; paper is silent on output scaling — documented in
   DESIGN.md §7);
-* training path: fused Pallas kernel (TPU) or jnp chunkwise (CPU);
+* training path: fused Pallas kernels for forward AND backward (TPU; the
+  backward walks checkpointed chunk states in reverse — cfg.hla.fused_bwd,
+  DESIGN.md §3) or jnp chunkwise (CPU);
 * decode path: O(1)-state streaming steps (view A).
 """
 
@@ -118,7 +120,8 @@ def mixer_apply(p, x, cfg, want_state: bool = False):
             o, st = core_hla2.hla2_scan(q, k, v, gamma, lam=hc.lam, **kw)
         elif use_pallas:
             o = kops.hla2_attention(
-                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, **kw
+                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam,
+                fused_bwd=hc.fused_bwd, **kw
             )
             st = None
         else:
@@ -129,7 +132,9 @@ def mixer_apply(p, x, cfg, want_state: bool = False):
         if hc.impl == "scan":
             o, st = core_ahla.ahla_scan(q, k, v, gamma, **kw)
         elif use_pallas:
-            o = kops.ahla_attention(q, k, v, gamma, chunk=hc.chunk, **kw)
+            o = kops.ahla_attention(
+                q, k, v, gamma, chunk=hc.chunk, fused_bwd=hc.fused_bwd, **kw
+            )
             st = None
         else:
             o, st = core_ahla.ahla_chunkwise(q, k, v, gamma, chunk=hc.chunk, **kw)

@@ -8,7 +8,12 @@ corrected operators used by this framework are.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.monoid import (
     AHLADecayState,

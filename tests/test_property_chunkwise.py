@@ -7,7 +7,12 @@ system's invariants).
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.ahla import ahla_chunkwise, ahla_serial
 from repro.core.hla2 import hla2_chunkwise, hla2_serial
