@@ -107,6 +107,29 @@ def render_train_step():
     return "\n".join(out)
 
 
+def render_serving():
+    """§Serving table from results/serving.json (benchmarks.run)."""
+    path = os.path.join(RESULTS, "serving.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    sh = r["shape"]
+    return "\n".join([
+        "\n### §Serving — continuous batching "
+        f"(backend={r['backend']}, slots={sh['slots']} "
+        f"prompt={sh['prompt_len']} gen={sh['gen_len']} "
+        f"block={sh['block']} requests={sh['requests']})\n",
+        "| metric | value |",
+        "|---|---|",
+        f"| TTFT (mean, chunk-parallel prefill) | {r['ttft_ms_mean']:.1f} ms |",
+        f"| steady-state decode | {r['decode_tok_per_s']:.1f} tok/s |",
+        f"| prefill throughput | {r['prefill_tok_per_s']:.1f} tok/s |",
+        "\n(interpret-mode numbers on CPU are not indicative — compare on "
+        "TPU; the table tracks the serving-throughput trajectory.)",
+    ])
+
+
 def render(rows):
     out = []
     out.append("### §Dry-run — compile results (every arch x shape x mesh)\n")
@@ -161,6 +184,9 @@ def main():
     ts = render_train_step()
     if ts:
         text = text + "\n" + ts
+    sv = render_serving()
+    if sv:
+        text = text + "\n" + sv
     print(text)
     if args.md:
         with open(args.md, "w") as f:

@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  The paper is algorithmic
   `train_step` (fwd+bwd us/step: fused Pallas VJP with chunk-state
   checkpointing vs recompute-in-backward vs jnp reference; persisted to
   ``results/train_step.json`` for `benchmarks.report`);
+* serving (continuous batching over the paper's O(1)-state decode) —
+  `serving` (TTFT + steady-state decode tok/s from the state-pool engine;
+  persisted to ``results/serving.json``);
 * the multi-pod roofline table is produced by `benchmarks.roofline`
   (separate long-running driver) and summarized by `benchmarks.report`.
 """
@@ -234,6 +237,70 @@ def bench_decode_throughput(rows):
     rows.append(("decode/hla2_reduced", us, f"tok_per_s={B/us*1e6:.0f}"))
 
 
+def bench_serving(rows):
+    """Continuous-batching engine: TTFT + steady-state decode tok/s.
+
+    Chunk-parallel prefill admissions interleaved with block decode over
+    the reduced paper model (repro.serving.Engine); TTFT = admission ->
+    first sampled token (one prefill call + sample), steady-state tok/s =
+    generated tokens / decode wall time.  Dumped to ``results/serving.json``
+    for ``benchmarks.report`` (§Serving table).
+    """
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.models.param import init_params
+    from repro.serving import Engine, GenRequest
+
+    cfg = get_config("hla-1b", reduced=True)
+    params = init_params(lm.lm_specs(cfg), jax.random.key(0))
+    slots, prompt_len, gen_len, block = 4, 32, 32, 8
+    engine = Engine(
+        cfg, params, slots=slots,
+        max_len=prompt_len + gen_len + 8, block=block,
+    )
+    rng = np.random.RandomState(5)
+    reqs = [
+        GenRequest(rid=i, prompt=rng.randint(2, cfg.vocab, prompt_len),
+                   max_new=gen_len)
+        for i in range(8)
+    ]
+    # warm the jits (prefill trace + decode-block trace), then measure
+    engine.run([GenRequest(rid=-1, prompt=reqs[0].prompt, max_new=block)])
+    engine.stats.update(
+        prefill_s=0.0, decode_s=0.0, prompt_tokens=0,
+        generated_tokens=0, ttft_s=[],
+    )
+    results = engine.run(reqs)
+    st = engine.stats
+    ttft_ms = 1e3 * float(np.mean(st["ttft_s"]))
+    # exclude each request's first token (produced by prefill) from the
+    # steady-state decode rate
+    decode_toks = sum(len(r.tokens) - 1 for r in results)
+    tok_s = decode_toks / max(st["decode_s"], 1e-9)
+    backend = jax.default_backend()
+    rows.append((
+        "serving/ttft", ttft_ms * 1e3,
+        f"ttft_ms={ttft_ms:.1f} prompt_len={prompt_len} backend={backend}",
+    ))
+    rows.append((
+        "serving/decode", 0.0,
+        f"tok_per_s={tok_s:.1f} slots={slots} block={block}",
+    ))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "serving.json"), "w") as f:
+        json.dump({
+            "backend": backend,
+            "shape": {"slots": slots, "prompt_len": prompt_len,
+                      "gen_len": gen_len, "block": block,
+                      "requests": len(reqs)},
+            "ttft_ms_mean": round(ttft_ms, 2),
+            "decode_tok_per_s": round(tok_s, 1),
+            "prefill_tok_per_s": round(
+                st["prompt_tokens"] / max(st["prefill_s"], 1e-9), 1
+            ),
+        }, f, indent=1)
+
+
 def main() -> None:
     rows = []
     bench_equivalence(rows)
@@ -243,6 +310,7 @@ def main() -> None:
     bench_kernels(rows)
     bench_train_step(rows)
     bench_decode_throughput(rows)
+    bench_serving(rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import lm
 from repro.models.param import init_params
+from repro.serving.sampling import SamplingConfig, sample
 
 
 def state_bytes(tree):
@@ -30,7 +31,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ctx", type=int, default=4096)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--sampling", default="greedy",
+                    choices=["greedy", "temperature", "top_k"])
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    scfg = SamplingConfig(
+        method=args.sampling, temperature=args.temperature, top_k=args.top_k
+    )
 
     cfg = get_config("hla-1b", reduced=True)
     params = init_params(lm.lm_specs(cfg), jax.random.key(0))
@@ -45,20 +54,23 @@ def main():
           f"{state_bytes(kv)/2**20:8.2f} MiB  (linear in context)")
 
     @jax.jit
-    def step(params, tok, states, pos):
+    def step(params, tok, states, pos, key):
         logits, st, _ = lm.lm_apply(
             params, tok, cfg, states=states, positions=pos, mode="decode"
         )
-        return jnp.argmax(logits, -1).astype(jnp.int32), st
+        key, sub = jax.random.split(key)
+        nxt = sample(logits[:, -1], sub, scfg)  # shared serving sampler
+        return nxt[:, None], st, key
 
     tok = jnp.ones((B, 1), jnp.int32)
-    rng = np.random.RandomState(0)
+    key = jax.random.key(args.seed)
+    rng = np.random.RandomState(args.seed)
     checkpoints = [args.ctx // 4, args.ctx // 2, args.ctx]
     t0 = time.time()
     for t in range(args.ctx):
         if t % 64 == 0:  # inject fresh context tokens periodically
             tok = jnp.asarray(rng.randint(2, cfg.vocab, (B, 1)), jnp.int32)
-        tok, states = step(params, tok, states, jnp.full((B, 1), t))
+        tok, states, key = step(params, tok, states, jnp.full((B, 1), t), key)
         if (t + 1) in checkpoints:
             dt = time.time() - t0
             print(f"ctx {t+1:7d}: {(t+1)*B/dt:8.1f} tok/s, "

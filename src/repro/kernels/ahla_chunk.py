@@ -44,17 +44,21 @@ def _ahla_chunk_kernel(
     q_ref,  # (1, w, d)
     k_ref,  # (1, w, d)
     v_ref,  # (1, w, dv)
-    o_ref,  # (1, w, dv)
-    P_out,  # (1, d, dv+1)   [P | m]
-    E_out,  # (1, d, dv+1)   [E | n]
-    *rest,
+    *rest,  # [P0_in, E0_in iff has_init], o, P_out, E_out,
+    #         [Pc_out, Ec_out iff save_states], scratch P, E
     w: int,
     normalize: bool,
     eps: float,
     has_decay: bool,
+    has_init: bool,
     n_chunks: int,
     save_states: bool,
 ):
+    if has_init:
+        P0_in, E0_in = rest[:2]
+        rest = rest[2:]
+    o_ref, P_out, E_out = rest[:3]
+    rest = rest[3:]
     if save_states:
         Pc_out, Ec_out, P, E = rest
     else:
@@ -64,8 +68,12 @@ def _ahla_chunk_kernel(
 
     @pl.when(c == 0)
     def _init():
-        P[...] = jnp.zeros_like(P)
-        E[...] = jnp.zeros_like(E)
+        if has_init:
+            P[...] = P0_in[0].astype(f32)
+            E[...] = E0_in[0].astype(f32)
+        else:
+            P[...] = jnp.zeros_like(P)
+            E[...] = jnp.zeros_like(E)
 
     Q = q_ref[0].astype(f32)
     K = k_ref[0].astype(f32)
@@ -100,11 +108,17 @@ def ahla_chunk_pallas(
     eps: float = 1e-6,
     interpret: bool | None = None,
     save_chunk_states: bool = False,
+    initial_state=None,
 ):
     """Fused AHLA forward.  Returns ``(o, (P, m, E, n))``, plus the
     per-chunk incoming ``([P|m], [E|n])`` checkpoints (``(BH, nc, d, dv+1)``)
     when ``save_chunk_states=True``.  Arbitrary ``n`` is zero-padded to a
-    chunk multiple and sliced back."""
+    chunk multiple and sliced back.
+
+    ``initial_state`` is an optional ``(P, m, E, n)`` carry per row
+    (``(BH, d, dv) / (BH, d) / (BH, d, dv) / (BH, d)``) the chunk walk
+    resumes from — one chunk-parallel call prefills a whole prompt exactly
+    (serving engine prefill path)."""
     BH, n, d = q.shape
     dv = v.shape[-1]
     w = min(chunk, n)
@@ -116,6 +130,7 @@ def ahla_chunk_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     has_decay = gamma is not None
+    has_init = initial_state is not None
     gamma_in = (
         jnp.ones((BH, 1), jnp.float32)
         if gamma is None
@@ -127,6 +142,7 @@ def ahla_chunk_pallas(
         normalize=normalize,
         eps=eps,
         has_decay=has_decay,
+        has_init=has_init,
         n_chunks=nc,
         save_states=save_chunk_states,
     )
@@ -142,6 +158,21 @@ def ahla_chunk_pallas(
             pl.BlockSpec((1, w, d), lambda i, c: (i, c, 0)),
             pl.BlockSpec((1, w, dv), lambda i, c: (i, c, 0)),
     ]
+    inputs = [gamma_in, q, k, v]
+    if has_init:
+        P0, m0, E0, n0 = initial_state
+        f32 = jnp.float32
+        Pbar = jnp.concatenate(
+            [P0.astype(f32), m0.astype(f32)[..., None]], axis=-1
+        )
+        Ebar = jnp.concatenate(
+            [E0.astype(f32), n0.astype(f32)[..., None]], axis=-1
+        )
+        inputs += [Pbar, Ebar]
+        in_specs += [
+            pl.BlockSpec((1, d, dv + 1), lambda i, c: (i, 0, 0))
+            for _ in range(2)
+        ]
     out_specs = [
             pl.BlockSpec((1, w, dv), lambda i, c: (i, c, 0)),
             pl.BlockSpec((1, d, dv + 1), lambda i, c: (i, 0, 0)),
@@ -169,7 +200,7 @@ def ahla_chunk_pallas(
         scratch_shapes=scratch_shapes,
         interpret=interpret,
         compiler_params=_compiler_params(interpret),
-    )(gamma_in, q, k, v)
+    )(*inputs)
     o, Pa, Ea = outs[:3]
     o = o[:, :n]
     Pa, Ea = _unscale_padded_state(Pa, Ea, gamma, pad)

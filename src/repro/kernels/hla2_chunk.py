@@ -95,22 +95,27 @@ def _unscale_padded_state(state, gamma, pad: int):
 
 
 def _hla2_chunk_kernel(
-    # inputs
+    # inputs: gamma, q/k/v, then the initial carry (5) iff has_init
     gamma_ref,  # (1, 1) f32
     q_ref,  # (1, w, d)
     k_ref,  # (1, w, d)
     v_ref,  # (1, w, dv)
     # outputs: o, final state (5), then per-chunk states (5) iff save_states
-    o_ref,  # (1, w, dv)
     *rest,
     w: int,
     normalize: bool,
     eps: float,
     lam: float,
     has_decay: bool,
+    has_init: bool,
     n_chunks: int,
     save_states: bool,
 ):
+    if has_init:
+        (S0_in, C0_in, m0_in, G0_in, h0_in) = rest[:5]
+        rest = rest[5:]
+    o_ref = rest[0]
+    rest = rest[1:]
     if save_states:
         (S_out, C_out, m_out, G_out, h_out,
          Sc_out, Cc_out, mc_out, Gc_out, hc_out,
@@ -122,11 +127,18 @@ def _hla2_chunk_kernel(
 
     @pl.when(c == 0)
     def _init():
-        S[...] = jnp.zeros_like(S)
-        C[...] = jnp.zeros_like(C)
-        m[...] = jnp.zeros_like(m)
-        G[...] = jnp.zeros_like(G)
-        h[...] = jnp.zeros_like(h)
+        if has_init:
+            S[...] = S0_in[0].astype(f32)
+            C[...] = C0_in[0].astype(f32)
+            m[...] = m0_in[0].astype(f32)
+            G[...] = G0_in[0].astype(f32)
+            h[...] = h0_in[0].astype(f32)
+        else:
+            S[...] = jnp.zeros_like(S)
+            C[...] = jnp.zeros_like(C)
+            m[...] = jnp.zeros_like(m)
+            G[...] = jnp.zeros_like(G)
+            h[...] = jnp.zeros_like(h)
 
     Q = q_ref[0].astype(f32)  # (w, d)
     K = k_ref[0].astype(f32)
@@ -173,10 +185,17 @@ def hla2_chunk_pallas(
     lam: float = 0.0,
     interpret: bool | None = None,
     save_chunk_states: bool = False,
+    initial_state=None,
 ):
     """Fused forward.  Returns ``(o, (S, C, m, G, h))`` final state per row,
     plus the per-chunk incoming-state checkpoint tuple (shapes
     ``(BH, nc, ...)``) when ``save_chunk_states=True``.
+
+    ``initial_state`` is an optional ``(S, C, m, G, h)`` carry per row
+    (shapes ``(BH, d, d) / (BH, d, dv) / (BH, d) / (BH, d, dv) / (BH, d)``)
+    the chunk walk resumes from — this is how a whole prompt prefills in a
+    single chunk-parallel call that exactly reproduces the serial
+    recurrence (the Section-4 identity; used by the serving engine).
 
     Arbitrary ``n``: inputs are zero-padded up to a chunk multiple and the
     output sliced back to ``n`` (the checkpoint tuple keeps the padded
@@ -193,6 +212,7 @@ def hla2_chunk_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     has_decay = gamma is not None
+    has_init = initial_state is not None
     if gamma is None:
         gamma_in = jnp.ones((BH, 1), jnp.float32)
     else:
@@ -205,6 +225,7 @@ def hla2_chunk_pallas(
         eps=eps,
         lam=lam,
         has_decay=has_decay,
+        has_init=has_init,
         n_chunks=nc,
         save_states=save_chunk_states,
     )
@@ -224,6 +245,17 @@ def hla2_chunk_pallas(
             pl.BlockSpec((1, w, d), lambda i, c: (i, c, 0)),
             pl.BlockSpec((1, w, dv), lambda i, c: (i, c, 0)),
     ]
+    inputs = [gamma_in, q, k, v]
+    if has_init:
+        S0, C0, m0, G0, h0 = initial_state
+        inputs += [
+            S0.astype(jnp.float32),
+            C0.astype(jnp.float32),
+            m0.reshape(BH, 1, d).astype(jnp.float32),
+            G0.astype(jnp.float32),
+            h0.reshape(BH, 1, d).astype(jnp.float32),
+        ]
+        in_specs += [state_spec(a, b) for a, b in state_shapes]
     out_specs = [
             pl.BlockSpec((1, w, dv), lambda i, c: (i, c, 0)),
     ] + [state_spec(a, b) for a, b in state_shapes]
@@ -246,7 +278,7 @@ def hla2_chunk_pallas(
         scratch_shapes=scratch_shapes,
         interpret=interpret,
         compiler_params=_compiler_params(interpret),
-    )(gamma_in, q, k, v)
+    )(*inputs)
     o, S, C, m, G, h = outs[:6]
     o = o[:, :n]
     state = _unscale_padded_state((S, C, m[:, 0], G, h[:, 0]), gamma, pad)

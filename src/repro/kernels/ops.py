@@ -34,7 +34,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from ..core.ahla import AHLAState, ahla_chunkwise
+from ..core.hla2 import HLA2State, hla2_chunkwise
 from .ahla_chunk import ahla_chunk_bwd_pallas, ahla_chunk_pallas
+from .decode_step import ahla_step_pallas, hla2_step_pallas
 from .hla2_chunk import hla2_chunk_bwd_pallas, hla2_chunk_pallas
 
 
@@ -225,3 +228,128 @@ def ahla_attention(
     return _ahla_fwd_core(
         q, k, v, gamma, chunk, normalize, eps, use_pallas, fused_bwd
     )
+
+
+# --------------------------------------------------------------------------
+# Inference: chunk-parallel prefill + fused batched decode steps
+# --------------------------------------------------------------------------
+#
+# ``*_prefill`` runs a whole prompt through ONE chunk-parallel kernel call,
+# optionally resuming from a carry, and returns the final streaming state —
+# exactly the serial recurrence by the paper's Section-4 identity (no
+# per-token loop, no approximation).  ``*_decode_step`` applies one token of
+# the streaming recurrence to every (batch, head) row in a single fused
+# launch with in-place state update.  Both are inference-only (no VJP) and
+# keep a pure-jnp fallback (CPU / correctness oracle).
+
+
+def hla2_prefill(
+    q, k, v, gamma=None, *, state: HLA2State | None = None,
+    chunk: int = 128, normalize: bool = False, eps: float = 1e-6,
+    lam: float = 0.0, use_pallas: bool = True,
+):
+    """Chunk-parallel HLA2 prefill over (B, H, n, d).  Returns
+    ``(o, HLA2State)`` — the state decodes onward via ``hla2_decode_step``."""
+    if not use_pallas:
+        return hla2_chunkwise(
+            q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
+            lam=lam, state=state,
+        )
+    qf, B, H = _merge_bh(q)
+    kf, _, _ = _merge_bh(k)
+    vf, _, _ = _merge_bh(v)
+    gf = None if gamma is None else (
+        jnp.broadcast_to(jnp.asarray(gamma), (B, H)).reshape(B * H)
+    )
+    init = None
+    if state is not None:
+        init = tuple(
+            x.astype(jnp.float32).reshape((B * H,) + x.shape[2:])
+            for x in state
+        )
+    o, (S, C, m, G, h) = hla2_chunk_pallas(
+        qf, kf, vf, gf, chunk=chunk, normalize=normalize, eps=eps, lam=lam,
+        initial_state=init,
+    )
+    o = o.reshape(q.shape[:2] + o.shape[1:])
+    unm = lambda x: x.reshape((B, H) + x.shape[1:])  # noqa: E731
+    return o, HLA2State(unm(S), unm(C), unm(m), unm(G), unm(h))
+
+
+def ahla_prefill(
+    q, k, v, gamma=None, *, state: AHLAState | None = None,
+    chunk: int = 128, normalize: bool = False, eps: float = 1e-6,
+    use_pallas: bool = True,
+):
+    """Chunk-parallel AHLA prefill over (B, H, n, d).  Returns
+    ``(o, AHLAState)``.  The undecayed cross moment ``R`` (scan-only
+    bookkeeping, unused by decode outputs) accumulates outside the kernel."""
+    if not use_pallas:
+        return ahla_chunkwise(
+            q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
+            state=state,
+        )
+    qf, B, H = _merge_bh(q)
+    kf, _, _ = _merge_bh(k)
+    vf, _, _ = _merge_bh(v)
+    gf = None if gamma is None else (
+        jnp.broadcast_to(jnp.asarray(gamma), (B, H)).reshape(B * H)
+    )
+    init = None
+    R0 = None
+    if state is not None:
+        R0 = state.R
+        init = tuple(
+            x.astype(jnp.float32).reshape((B * H,) + x.shape[2:])
+            for x in (state.P, state.m, state.E, state.n)
+        )
+    o, (P, m, E, n) = ahla_chunk_pallas(
+        qf, kf, vf, gf, chunk=chunk, normalize=normalize, eps=eps,
+        initial_state=init,
+    )
+    o = o.reshape(q.shape[:2] + o.shape[1:])
+    unm = lambda x: x.reshape((B, H) + x.shape[1:])  # noqa: E731
+    f32 = jnp.float32
+    R = jnp.einsum(
+        "bhtd,bhte->bhde", k.astype(f32), q.astype(f32)
+    )
+    if R0 is not None:
+        R = R + R0.astype(f32)
+    return o, AHLAState(R, unm(P), unm(m), unm(E), unm(n))
+
+
+def hla2_decode_step(
+    state: HLA2State, q_t, k_t, v_t, gamma=None, *,
+    normalize: bool = False, eps: float = 1e-6, lam: float = 0.0,
+    use_pallas: bool = True,
+):
+    """One fused decode token over (..., d) rows.  Returns ``(state, o_t)``."""
+    if not use_pallas:
+        from ..core.hla2 import hla2_step
+
+        return hla2_step(
+            state, q_t, k_t, v_t, gamma, normalize=normalize, eps=eps,
+            lam=lam,
+        )
+    new_state, o = hla2_step_pallas(
+        tuple(state), q_t, k_t, v_t, gamma, normalize=normalize, eps=eps,
+        lam=lam,
+    )
+    return HLA2State(*new_state), o
+
+
+def ahla_decode_step(
+    state: AHLAState, q_t, k_t, v_t, gamma=None, *,
+    normalize: bool = False, eps: float = 1e-6, use_pallas: bool = True,
+):
+    """One fused AHLA decode token.  Returns ``(state, o_t)``."""
+    if not use_pallas:
+        from ..core.ahla import ahla_step
+
+        return ahla_step(
+            state, q_t, k_t, v_t, gamma, normalize=normalize, eps=eps
+        )
+    new_state, o = ahla_step_pallas(
+        tuple(state), q_t, k_t, v_t, gamma, normalize=normalize, eps=eps
+    )
+    return AHLAState(*new_state), o

@@ -1,93 +1,24 @@
-"""Batched serving loop: continuous-batching-lite over fixed slots.
+"""Serving CLI — a thin shell over ``repro.serving.Engine``.
 
-HLA/SSM archs decode from O(1) state (the paper's Fig. 1(A) recurrence);
-softmax archs from a KV cache.  Requests (prompt token lists) are admitted
-into free slots, prefilled, then decoded step-locked with the running
-batch; finished slots are recycled without stopping the batch — the
-serving pattern that matters at scale, exercised here with synthetic
-prompts.
+Continuous batching over fixed slots with chunk-parallel prefill
+admission, step-locked block decode, and device-side sampling
+(DESIGN.md §8).  Synthetic prompts stand in for traffic.
 
     PYTHONPATH=src python -m repro.launch.serve --arch hla-1b --reduced \
-        --slots 4 --requests 8 --gen-len 32
+        --slots 4 --requests 8 --gen-len 32 --block 8 --sampling greedy
 """
 
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
 from ..models import lm
 from ..models.param import init_params
+from ..serving import Engine, GenRequest, SamplingConfig
 from .mesh import make_mesh
-
-
-class Server:
-    def __init__(self, cfg, params, slots: int, max_len: int):
-        self.cfg = cfg
-        self.params = params
-        self.slots = slots
-        self.max_len = max_len
-        self.states = lm.lm_init_states(cfg, slots, max_len)
-        self.positions = jnp.zeros((slots, 1), jnp.int32)
-        self.active = np.zeros(slots, bool)
-        self.tokens = jnp.ones((slots, 1), jnp.int32)
-        self.outputs = [[] for _ in range(slots)]
-
-        self._decode = jax.jit(
-            lambda p, t, s, pos: lm.lm_apply(
-                p, t, cfg, states=s, positions=pos, mode="decode"
-            )[:2]
-        )
-
-    def admit(self, slot: int, prompt: np.ndarray):
-        """Prefill one slot by streaming the prompt through decode steps.
-
-        Other slots' states are snapshot-restored afterwards: the batched
-        decode used for admission must not advance live requests (a real
-        bug caught by tests/test_serving.py)."""
-        self.active[slot] = True
-        self.outputs[slot] = []
-        snapshot = self.states
-
-        # reset this slot's state: zero it via tree surgery
-        def reset(leaf):
-            return leaf.at[:, slot].set(0) if leaf.ndim >= 2 else leaf
-
-        self.states = jax.tree.map(reset, self.states)
-        pos = 0
-        for t in prompt:
-            tok = self.tokens.at[slot, 0].set(int(t))
-            posv = self.positions.at[slot, 0].set(pos)
-            logits, self.states = self._decode(
-                self.params, tok, self.states, posv
-            )
-            self.tokens = tok
-            self.positions = posv
-            pos += 1
-        self.positions = self.positions.at[slot, 0].set(pos)
-
-        # keep the admitted slot's fresh state; restore everyone else
-        def merge(new, old):
-            if new.ndim >= 2 and new.shape[1] == self.slots:
-                return old.at[:, slot].set(new[:, slot])
-            return new
-
-        self.states = jax.tree.map(merge, self.states, snapshot)
-
-    def step(self):
-        logits, self.states = self._decode(
-            self.params, self.tokens, self.states, self.positions
-        )
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        self.tokens = nxt
-        self.positions = self.positions + 1
-        for s in range(self.slots):
-            if self.active[s]:
-                self.outputs[s].append(int(nxt[s, 0]))
-        return nxt
 
 
 def main(argv=None):
@@ -98,6 +29,11 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--block", type=int, default=8)
+    ap.add_argument("--sampling", default="greedy",
+                    choices=["greedy", "temperature", "top_k"])
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -105,38 +41,52 @@ def main(argv=None):
     mesh = make_mesh()
     rng = np.random.RandomState(args.seed)
     with mesh:
-        specs = lm.lm_specs(cfg)
-        params = init_params(specs, jax.random.key(args.seed))
-        srv = Server(cfg, params, args.slots,
-                     args.prompt_len + args.gen_len + 8)
-
-        pending = [
-            rng.randint(2, cfg.vocab, size=args.prompt_len)
-            for _ in range(args.requests)
-        ]
-        done = 0
-        gen_counts = np.zeros(args.slots, int)
-        t0 = time.time()
-        toks = 0
-        while done < args.requests or srv.active.any():
-            for s in range(args.slots):
-                if not srv.active[s] and pending:
-                    srv.admit(s, pending.pop())
-                    gen_counts[s] = 0
-            srv.step()
-            toks += int(srv.active.sum())
-            for s in range(args.slots):
-                if srv.active[s]:
-                    gen_counts[s] += 1
-                    if gen_counts[s] >= args.gen_len:
-                        srv.active[s] = False
-                        done += 1
-        dt = time.time() - t0
-        print(
-            f"[serve] {done} requests, {toks} tokens in {dt:.2f}s "
-            f"({toks/dt:.1f} tok/s, state-based decode)"
+        params = init_params(lm.lm_specs(cfg), jax.random.key(args.seed))
+        engine = Engine(
+            cfg, params,
+            slots=args.slots,
+            max_len=args.prompt_len + args.gen_len + 8,
+            sampling=SamplingConfig(
+                method=args.sampling, temperature=args.temperature,
+                top_k=args.top_k,
+            ),
+            block=args.block,
+            seed=args.seed,
         )
-    return done
+        requests = [
+            GenRequest(
+                rid=i,
+                prompt=rng.randint(2, cfg.vocab, size=args.prompt_len),
+                max_new=args.gen_len,
+            )
+            for i in range(args.requests)
+        ]
+        # warm the prefill/decode jits so TTFT and tok/s measure steady
+        # state, not trace+compile (same protocol as benchmarks.run)
+        engine.run([GenRequest(
+            rid=-1, prompt=requests[0].prompt, max_new=args.block,
+        )])
+        engine.stats.update(
+            prefill_s=0.0, decode_s=0.0, prompt_tokens=0,
+            generated_tokens=0, ttft_s=[],
+        )
+        t0 = time.time()
+        results = engine.run(requests)
+        dt = time.time() - t0
+        st = engine.stats
+        gen = st["generated_tokens"]
+        # each request's first token comes from the prefill call; count only
+        # decode-block tokens against decode wall time
+        decode_toks = gen - len(results)
+        ttft_ms = 1e3 * float(np.mean(st["ttft_s"])) if st["ttft_s"] else 0.0
+        decode_tps = decode_toks / st["decode_s"] if st["decode_s"] else 0.0
+        print(
+            f"[serve] {len(results)} requests, {gen} generated tokens in "
+            f"{dt:.2f}s | TTFT {ttft_ms:.1f}ms mean | "
+            f"decode {decode_tps:.1f} tok/s | "
+            f"prefill {st['prompt_tokens']/max(st['prefill_s'],1e-9):.1f} tok/s"
+        )
+    return len(results)
 
 
 if __name__ == "__main__":

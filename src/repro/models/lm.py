@@ -100,7 +100,8 @@ def layer_apply(
             y, new_state = mixer_mod.mixer_step(p["mixer"], h, state, cfg)
         else:
             y, st = mixer_mod.mixer_apply(
-                p["mixer"], h, cfg, want_state=(mode == "prefill")
+                p["mixer"], h, cfg, want_state=(mode == "prefill"),
+                state=state if mode == "prefill" else None,
             )
             new_state = st if mode == "prefill" else None
     elif kind == "mamba":
@@ -317,6 +318,22 @@ def lm_apply(
             "...d,dv->...v", x, params["unembed"]["kernel"].astype(x.dtype)
         )
     return logits, (new_states if collect_state else None), aux
+
+
+def lm_prefill(params, tokens, cfg, *, states=None, positions=None):
+    """Chunk-parallel prompt prefill for serving admission.
+
+    Runs the whole prompt through ``mode="prefill"`` — for streaming mixers
+    (hla2/ahla/...) each layer is ONE chunkwise call (the Pallas stateful
+    kernel on TPU, jnp chunkwise on CPU), never a per-token Python loop —
+    and returns ``(last_logits, states)``: the logits of the final prompt
+    position (to sample the first generated token) plus the decode states.
+    """
+    logits, states, _ = lm_apply(
+        params, tokens, cfg, states=states, positions=positions,
+        mode="prefill",
+    )
+    return logits[:, -1], states
 
 
 def lm_loss(params, tokens, labels, cfg, *, vis_embed=None):

@@ -102,22 +102,34 @@ def _variant(cfg):
     return cfg.hla.variant
 
 
-def mixer_apply(p, x, cfg, want_state: bool = False):
-    """Training/prefill path over a full sequence.  Returns (out, final_state)."""
+def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
+    """Training/prefill path over a full sequence.  Returns (out, final_state).
+
+    ``state`` is an optional streaming carry to resume from (incremental
+    prefill); every path below threads it through.
+    """
     B, n, _ = x.shape
     hc = cfg.hla
     q, k, v = _project(p, x, cfg)
     gamma = _gamma(p, cfg, B)
-    # the fused kernel path discards states; prefill needs them -> jnp path
-    use_pallas = (
-        hc.use_pallas and not want_state and jax.default_backend() == "tpu"
-    )
+    # hla2/ahla prefill (want_state) rides the stateful kernel API
+    # (kops.*_prefill returns the final carry); other variants still fall
+    # back to the jnp chunkwise path when states are needed.
+    use_pallas = hc.use_pallas and jax.default_backend() == "tpu"
     kw = dict(normalize=hc.normalize, eps=1e-6)
     variant = _variant(cfg)
 
     if variant == "hla2":
         if hc.impl == "scan":  # paper-faithful token-level Blelloch
-            o, st = core_hla2.hla2_scan(q, k, v, gamma, lam=hc.lam, **kw)
+            o, st = core_hla2.hla2_scan(
+                q, k, v, gamma, lam=hc.lam, state=state, **kw
+            )
+        elif use_pallas and (want_state or state is not None):
+            # one chunk-parallel kernel call prefills the whole prompt and
+            # hands back the exact streaming state (Section-4 identity)
+            o, st = kops.hla2_prefill(
+                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, state=state, **kw
+            )
         elif use_pallas:
             o = kops.hla2_attention(
                 q, k, v, gamma, chunk=hc.chunk, lam=hc.lam,
@@ -126,26 +138,36 @@ def mixer_apply(p, x, cfg, want_state: bool = False):
             st = None
         else:
             o, st = core_hla2.hla2_chunkwise(
-                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, **kw
+                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, state=state, **kw
             )
     elif variant == "ahla":
         if hc.impl == "scan":
-            o, st = core_ahla.ahla_scan(q, k, v, gamma, **kw)
+            o, st = core_ahla.ahla_scan(q, k, v, gamma, state=state, **kw)
+        elif use_pallas and (want_state or state is not None):
+            o, st = kops.ahla_prefill(
+                q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+            )
         elif use_pallas:
             o = kops.ahla_attention(
                 q, k, v, gamma, chunk=hc.chunk, fused_bwd=hc.fused_bwd, **kw
             )
             st = None
         else:
-            o, st = core_ahla.ahla_chunkwise(q, k, v, gamma, chunk=hc.chunk, **kw)
+            o, st = core_ahla.ahla_chunkwise(
+                q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+            )
     elif variant == "hla3":
         o, st = core_hla3.hla3_exact_chunkwise(
-            q, k, v, gamma, chunk=hc.chunk, **kw
+            q, k, v, gamma, chunk=hc.chunk, state=state, **kw
         )
     elif variant == "hla3_paper":
-        o, st = core_hla3.hla3_paper_chunkwise(q, k, v, chunk=hc.chunk, **kw)
+        o, st = core_hla3.hla3_paper_chunkwise(
+            q, k, v, chunk=hc.chunk, state=state, **kw
+        )
     elif variant == "linattn":
-        o, st = core_lin.linattn_chunkwise(q, k, v, gamma, chunk=hc.chunk, **kw)
+        o, st = core_lin.linattn_chunkwise(
+            q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+        )
     else:
         raise ValueError(variant)
 
@@ -172,18 +194,34 @@ def mixer_init_state(cfg, B, dtype=jnp.float32):
 
 
 def mixer_step(p, x_t, state, cfg):
-    """One-token decode.  x_t: (B, 1, d).  Returns (out, new_state)."""
+    """One-token decode.  x_t: (B, 1, d).  Returns (out, new_state).
+
+    On TPU the hla2/ahla state update runs as ONE fused Pallas launch over
+    all (batch, head) rows with in-place state I/O (kernels/decode_step.py)
+    instead of the per-summary einsum chain; jnp steps remain the CPU path.
+    """
     B = x_t.shape[0]
     hc = cfg.hla
     q, k, v = _project(p, x_t, cfg)  # (B, H, 1, dh)
     q1, k1, v1 = q[..., 0, :], k[..., 0, :], v[..., 0, :]
     gamma = _gamma(p, cfg, B)
     kw = dict(normalize=hc.normalize, eps=1e-6)
+    fused_step = hc.use_pallas and jax.default_backend() == "tpu"
     variant = _variant(cfg)
     if variant == "hla2":
-        state, o = core_hla2.hla2_step(state, q1, k1, v1, gamma, lam=hc.lam, **kw)
+        if fused_step:
+            state, o = kops.hla2_decode_step(
+                state, q1, k1, v1, gamma, lam=hc.lam, **kw
+            )
+        else:
+            state, o = core_hla2.hla2_step(
+                state, q1, k1, v1, gamma, lam=hc.lam, **kw
+            )
     elif variant == "ahla":
-        state, o = core_ahla.ahla_step(state, q1, k1, v1, gamma, **kw)
+        if fused_step:
+            state, o = kops.ahla_decode_step(state, q1, k1, v1, gamma, **kw)
+        else:
+            state, o = core_ahla.ahla_step(state, q1, k1, v1, gamma, **kw)
     elif variant == "hla3":
         state, o = core_hla3.hla3_exact_step(state, q1, k1, v1, gamma, **kw)
     elif variant == "hla3_paper":

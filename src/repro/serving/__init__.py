@@ -1,0 +1,20 @@
+"""Inference engine: chunk-parallel prefill, fused decode, state-pool
+continuous batching (DESIGN.md §8).
+
+Layering:
+
+* ``sampling``   — seeded device-side token sampling (greedy / temperature
+                   / top-k), shared by the engine and the examples;
+* ``state_pool`` — per-slot decode-state ownership with *structural*
+                   slot-axis detection and scatter-based admit/evict;
+* ``engine``     — the continuous-batching loop: admissions prefill whole
+                   prompts in one chunk-parallel kernel call per layer,
+                   decode runs in step-locked device blocks with one host
+                   sync per block.
+
+``launch.serve`` is a thin CLI over ``engine.Engine``.
+"""
+
+from .engine import Engine, GenRequest, GenResult  # noqa: F401
+from .sampling import SamplingConfig, sample  # noqa: F401
+from .state_pool import StatePool  # noqa: F401

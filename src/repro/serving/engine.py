@@ -1,0 +1,225 @@
+"""Continuous-batching inference engine over the streaming-state models.
+
+The serving pattern the paper's O(1)-state decode enables (DESIGN.md §8):
+
+* **Admission = chunk-parallel prefill.**  A new prompt runs through
+  ``lm.lm_prefill`` — per layer ONE chunkwise kernel call (the stateful
+  Pallas kernel on TPU) that returns the exact streaming state by the
+  Section-4 identity — then the state is scatter-written into its slot.
+  No per-token Python loop, no device round-trip per prompt token, and no
+  touching of other slots' states (the pool write is a single
+  ``dynamic_update_slice`` per leaf).
+* **Decode = step-locked device blocks.**  All slots advance together
+  through a jitted ``lax.scan`` of ``block`` fused decode steps with
+  device-side sampling; generated tokens accumulate on device and transfer
+  to the host ONCE per block (vs. one ``int(...)`` sync per slot per step).
+  Inactive slots ride along masked (their sampled tokens are discarded and
+  their positions frozen); their stale states are overwritten at the next
+  admission.
+
+KV-cache (softmax / hybrid) archs are rejected: their pooled cache keeps a
+*shared* scalar ``length``, so per-slot admission would need per-slot
+lengths threaded through attention — a follow-up, not a serving-engine
+concern (the HLA family is the paper's point).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from .sampling import SamplingConfig, sample
+from .state_pool import StatePool
+
+STREAMING_MIXERS = ("hla2", "ahla", "hla3", "hla3_paper", "linattn", "rwkv6")
+
+
+@dataclasses.dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray  # (L,) int token ids
+    max_new: int = 32
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class GenResult:
+    rid: int
+    tokens: List[int]
+    ttft_s: float  # admission -> first sampled token
+    prompt_len: int
+
+
+class Engine:
+    """Slot-based continuous batching over a ``StatePool``."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 4096,
+        sampling: SamplingConfig = SamplingConfig(),
+        block: int = 8,
+        seed: int = 0,
+    ):
+        if cfg.mixer not in STREAMING_MIXERS or cfg.group_size:
+            raise ValueError(
+                f"Engine serves streaming-state archs {STREAMING_MIXERS}; "
+                f"mixer={cfg.mixer!r} (group_size={cfg.group_size}) decodes "
+                "from a KV cache whose pooled scalar length is shared across "
+                "slots — continuous batching needs per-slot lengths"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.sampling = sampling
+        self.block = block
+        self.pool = StatePool(
+            lambda n: lm.lm_init_states(cfg, n, max_len), slots
+        )
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self.positions = jnp.zeros((slots, 1), jnp.int32)
+        self.active = np.zeros(slots, bool)
+        self._slot_req: List[Optional[GenRequest]] = [None] * slots
+        self._slot_out: List[List[int]] = [[] for _ in range(slots)]
+        self._slot_ttft: List[float] = [0.0] * slots
+        self.results: Dict[int, GenResult] = {}
+        self.key = jax.random.key(seed)
+        self.stats = {
+            "prefill_s": 0.0, "decode_s": 0.0,
+            "prompt_tokens": 0, "generated_tokens": 0, "ttft_s": [],
+        }
+
+        scfg = self.sampling
+
+        def _prefill(params, prompt, key):
+            last_logits, states = lm.lm_prefill(params, prompt, cfg)
+            tok = sample(last_logits, key, scfg)
+            return tok, states
+
+        def _decode_block(params, states, tokens, positions, active, key,
+                          n_steps):
+            def body(carry, _):
+                states, tok, pos, key = carry
+                logits, states, _ = lm.lm_apply(
+                    params, tok, cfg, states=states, positions=pos,
+                    mode="decode",
+                )
+                key, sub = jax.random.split(key)
+                nxt = sample(logits[:, -1], sub, scfg)
+                tok = jnp.where(active[:, None], nxt[:, None], tok)
+                pos = pos + active[:, None].astype(pos.dtype)
+                return (states, tok, pos, key), nxt
+
+            (states, tok, pos, _), toks = jax.lax.scan(
+                body, (states, tokens, positions, key), length=n_steps
+            )
+            return states, tok, pos, toks  # toks: (n_steps, slots)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode_block = jax.jit(
+            _decode_block, static_argnames="n_steps"
+        )
+
+    # -- admission ----------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.pool.slots) if not self.active[s]]
+
+    def admit(self, slot: int, req: GenRequest) -> int:
+        """Prefill ``req`` into ``slot``; returns the first sampled token.
+
+        One chunk-parallel prefill call + one scatter write; live slots are
+        never read or written.
+        """
+        if self.active[slot]:
+            raise ValueError(f"slot {slot} is busy")
+        t0 = time.perf_counter()
+        self.key, sub = jax.random.split(self.key)
+        prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        first, state1 = self._prefill(self.params, prompt, sub)
+        self.pool.write_slot(slot, state1)
+        first_tok = int(first[0])  # one sync per admission: TTFT endpoint
+        ttft = time.perf_counter() - t0
+        self.tokens = self.tokens.at[slot, 0].set(first_tok)
+        self.positions = self.positions.at[slot, 0].set(len(req.prompt))
+        self.active[slot] = True
+        self._slot_req[slot] = req
+        self._slot_out[slot] = [first_tok]
+        self._slot_ttft[slot] = ttft
+        self.stats["prefill_s"] += ttft
+        self.stats["prompt_tokens"] += len(req.prompt)
+        self.stats["ttft_s"].append(ttft)
+        return first_tok
+
+    def _finish(self, slot: int) -> None:
+        req = self._slot_req[slot]
+        out = self._slot_out[slot][: req.max_new]
+        if req.eos_id is not None and req.eos_id in out:
+            out = out[: out.index(req.eos_id) + 1]
+        self.results[req.rid] = GenResult(
+            rid=req.rid, tokens=out, ttft_s=self._slot_ttft[slot],
+            prompt_len=len(req.prompt),
+        )
+        self.stats["generated_tokens"] += len(out)
+        self.active[slot] = False
+        self._slot_req[slot] = None
+
+    # -- decode -------------------------------------------------------------
+
+    def step_block(self, n_steps: Optional[int] = None) -> None:
+        """Advance every active slot ``n_steps`` tokens; ONE host transfer."""
+        n_steps = self.block if n_steps is None else n_steps
+        if n_steps <= 0:
+            return
+        self.key, sub = jax.random.split(self.key)
+        active_dev = jnp.asarray(self.active)
+        t0 = time.perf_counter()
+        states, tok, pos, toks = self._decode_block(
+            self.params, self.pool.states, self.tokens, self.positions,
+            active_dev, sub, n_steps=n_steps,
+        )
+        self.pool.states = states
+        self.tokens, self.positions = tok, pos
+        toks_host = np.asarray(toks)  # (n_steps, slots) — the block sync
+        self.stats["decode_s"] += time.perf_counter() - t0
+        for s in range(self.pool.slots):
+            if not self.active[s]:
+                continue
+            req = self._slot_req[s]
+            out = self._slot_out[s]
+            for i in range(n_steps):
+                if len(out) >= req.max_new or (
+                    req.eos_id is not None and out and out[-1] == req.eos_id
+                ):
+                    break
+                out.append(int(toks_host[i, s]))
+            if len(out) >= req.max_new or (
+                req.eos_id is not None and req.eos_id in out
+            ):
+                self._finish(s)
+
+    # -- driver -------------------------------------------------------------
+
+    def run(self, requests: List[GenRequest]) -> List[GenResult]:
+        """Serve ``requests`` to completion with continuous batching."""
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("request rids must be unique")
+        pending = collections.deque(requests)
+        while pending or self.active.any():
+            for s in self.free_slots():
+                if not pending:
+                    break
+                self.admit(s, pending.popleft())
+            if self.active.any():
+                self.step_block()
+        return [self.results[r.rid] for r in requests]

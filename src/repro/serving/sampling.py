@@ -1,0 +1,40 @@
+"""Seeded device-side token sampling (greedy / temperature / top-k).
+
+Shared by the serving engine's decode blocks and the examples — replaces
+the ad-hoc ``jnp.argmax`` calls.  ``sample`` is jit-friendly: the
+``SamplingConfig`` is a frozen (hashable) dataclass, so jitted callers
+close over it statically and the device never round-trips a decision to
+the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    method: str = "greedy"  # greedy | temperature | top_k
+    temperature: float = 1.0
+    top_k: int = 0  # only read when method == "top_k"
+
+
+def sample(logits: jax.Array, key, cfg: SamplingConfig) -> jax.Array:
+    """Sample next tokens from ``(..., vocab)`` logits -> ``(...,)`` int32.
+
+    ``key`` is unused for greedy (pass any key; keeps call sites uniform).
+    """
+    if cfg.method == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / max(cfg.temperature, 1e-6)
+    if cfg.method == "top_k":
+        if cfg.top_k <= 0:
+            raise ValueError("top_k sampling needs top_k > 0")
+        kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    elif cfg.method != "temperature":
+        raise ValueError(f"unknown sampling method {cfg.method!r}")
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,139 @@
+"""Per-slot decode-state pool with structural slot-axis detection.
+
+The old serving loop snapshotted the whole state tree and "restored" other
+slots with a shape heuristic (``leaf.shape[1] == slots``) — which misfires
+whenever an unrelated state dimension happens to equal the slot count, and
+silently skips leaves without a slot axis at position 1.  ``StatePool``
+instead *derives* each leaf's slot axis structurally: it abstractly
+evaluates the state template at ``slots`` and ``slots + 1`` and takes the
+(unique) axis whose extent changed.  Leaves whose shape does not depend on
+the slot count (e.g. the KV cache's shared scalar ``length``) get no slot
+axis and are left untouched by per-slot writes.
+
+Admission and eviction are **scatter-based**: one
+``lax.dynamic_update_slice`` per leaf at the detected axis — no full-tree
+snapshot/restore, no host round-trips.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _slot_axis(shape_a, shape_b, slots: int) -> Optional[int]:
+    """Axis along which ``shape_b`` (slots+1) grew out of ``shape_a`` (slots)."""
+    if tuple(shape_a) == tuple(shape_b):
+        return None
+    if len(shape_a) != len(shape_b):
+        raise ValueError(
+            f"state leaf rank depends on the slot count: {shape_a} vs {shape_b}"
+        )
+    diffs = [i for i, (x, y) in enumerate(zip(shape_a, shape_b)) if x != y]
+    if len(diffs) != 1 or shape_b[diffs[0]] != shape_a[diffs[0]] + 1:
+        raise ValueError(
+            f"ambiguous slot axis for state leaf {shape_a} -> {shape_b}"
+        )
+    return diffs[0]
+
+
+class StatePool:
+    """Owns the pooled decode states for ``slots`` concurrent requests.
+
+    ``template_fn(n)`` builds the state pytree for ``n`` slots (e.g.
+    ``lambda n: lm.lm_init_states(cfg, n, max_len)``).  It is evaluated
+    abstractly (``jax.eval_shape``) at ``slots`` and ``slots + 1`` to
+    detect slot axes, and concretely once at ``slots`` for the pool.
+    """
+
+    def __init__(self, template_fn: Callable[[int], Any], slots: int):
+        if slots < 1:
+            raise ValueError("need at least one slot")
+        self.slots = slots
+        self._template_fn = template_fn
+        self.states = template_fn(slots)
+        shapes_n = jax.eval_shape(lambda: template_fn(slots))
+        shapes_n1 = jax.eval_shape(lambda: template_fn(slots + 1))
+        leaves_n, self._treedef = jax.tree.flatten(shapes_n)
+        leaves_n1 = jax.tree.leaves(shapes_n1)
+        self.slot_axes: List[Optional[int]] = [
+            _slot_axis(a.shape, b.shape, slots)
+            for a, b in zip(leaves_n, leaves_n1)
+        ]
+
+        axes = self.slot_axes
+
+        def _write(pool_leaves, new_leaves, slot):
+            zero = jnp.zeros_like(slot)
+            out = []
+            for ax, pooled, new in zip(axes, pool_leaves, new_leaves):
+                if ax is None:
+                    out.append(pooled)
+                    continue
+                starts = [zero] * pooled.ndim
+                starts[ax] = slot
+                out.append(
+                    jax.lax.dynamic_update_slice(
+                        pooled, new.astype(pooled.dtype), tuple(starts)
+                    )
+                )
+            return out
+
+        def _read(pool_leaves, slot):
+            zero = jnp.zeros_like(slot)
+            out = []
+            for ax, pooled in zip(axes, pool_leaves):
+                if ax is None:
+                    out.append(pooled)
+                    continue
+                starts = [zero] * pooled.ndim
+                starts[ax] = slot
+                sizes = list(pooled.shape)
+                sizes[ax] = 1
+                out.append(
+                    jax.lax.dynamic_slice(pooled, tuple(starts), tuple(sizes))
+                )
+            return out
+
+        self._write = jax.jit(_write)
+        self._read = jax.jit(_read)
+
+    # -- tree plumbing ------------------------------------------------------
+
+    def _flatten(self, tree):
+        leaves, td = jax.tree.flatten(tree)
+        if td != self._treedef:
+            raise ValueError(
+                "state tree structure does not match the pool template"
+            )
+        return leaves
+
+    def empty_slot_state(self):
+        """A fresh single-slot state (what an admitted request starts from)."""
+        return self._template_fn(1)
+
+    # -- scatter admit / evict ---------------------------------------------
+
+    def write_slot(self, slot: int, state) -> None:
+        """Scatter a single-slot state (slot-dim 1 leaves) into ``slot``.
+
+        Only the target slot's data changes; leaves without a slot axis
+        (shared across slots) are left as-is.
+        """
+        new_leaves = self._write(
+            self._flatten(self.states), self._flatten(state),
+            jnp.int32(slot),
+        )
+        self.states = jax.tree.unflatten(self._treedef, new_leaves)
+
+    def read_slot(self, slot: int):
+        """Gather ``slot``'s state as a single-slot tree (slot dims = 1)."""
+        leaves = self._read(self._flatten(self.states), jnp.int32(slot))
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero a slot (eviction)."""
+        zeros = jax.tree.map(jnp.zeros_like, self.empty_slot_state())
+        self.write_slot(slot, zeros)
