@@ -130,6 +130,37 @@ def render_serving():
     ])
 
 
+def render_distributed():
+    """§Distributed table from results/distributed.json (benchmarks.run
+    bench_distributed): per-device train tok/s, 1 -> 8 host devices."""
+    path = os.path.join(RESULTS, "distributed.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    sh = r["shape"]
+    out = [
+        "\n### §Distributed — sharded train step scaling "
+        f"({sh['arch']}, B={sh['B']} n={sh['n']}, host-device mesh)\n",
+        "| devices | steps/s | tok/s | tok/s/device |",
+        "|---|---|---|---|",
+    ]
+    for e in r["entries"]:
+        out.append(
+            f"| {e['devices']} | {e['steps_per_s']} | {e['tok_per_s']} | "
+            f"{e['tok_per_s_per_device']} |"
+        )
+    ents = {e["devices"]: e for e in r["entries"]}
+    if 1 in ents and 8 in ents:
+        eff = ents[8]["tok_per_s"] / max(ents[1]["tok_per_s"], 1e-9) / 8
+        out.append(
+            f"\n8-device scaling efficiency: **{100 * eff:.0f}%** (host "
+            "devices share one CPU, so this tracks sharding/collective "
+            "overhead, not real speedup — compare on TPU)"
+        )
+    return "\n".join(out)
+
+
 def render(rows):
     out = []
     out.append("### §Dry-run — compile results (every arch x shape x mesh)\n")
@@ -187,6 +218,9 @@ def main():
     sv = render_serving()
     if sv:
         text = text + "\n" + sv
+    ds = render_distributed()
+    if ds:
+        text = text + "\n" + ds
     print(text)
     if args.md:
         with open(args.md, "w") as f:

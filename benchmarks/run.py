@@ -301,16 +301,126 @@ def bench_serving(rows):
         }, f, indent=1)
 
 
-def main() -> None:
+def bench_distributed(rows):
+    """Multi-device scaling: train-step tok/s per device, 1 -> 8 host
+    devices (each device count runs in a fresh subprocess because XLA
+    locks the host platform device count at first init).
+
+    The subprocess drives the REAL sharded train step
+    (``distributed.steps.make_train_step`` on a ("data", "model") mesh
+    from ``launch.mesh.make_mesh``) over the reduced paper model.  On CPU
+    host devices the absolute numbers are smoke-level; the per-device
+    ratio tracks sharding overhead.  Dumped to ``results/distributed.json``
+    for ``benchmarks.report`` (§Distributed table).
+    """
+    import subprocess
+    import sys
+    import textwrap
+
+    B, n, steps = 8, 64, 6
+    # single source for the shape: injected into the subprocess source AND
+    # recorded in results/distributed.json below
+    body = f"B, n, steps = {B}, {n}, {steps}\n" + textwrap.dedent("""
+        import json, time, functools
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.distributed import steps as steps_mod, sharding as shd
+        from repro.launch.mesh import make_mesh
+        from repro.models.param import init_params
+        from repro.optim import adamw
+        from repro.data.pipeline import DataConfig, SyntheticStream
+
+        cfg = get_config("hla-1b", reduced=True)
+        specs = steps_mod.model_specs(cfg)
+        mesh = make_mesh()
+        stream = SyntheticStream(DataConfig(cfg.vocab, n, B, seed=0))
+        with mesh:
+            ps = shd.param_shardings(specs, mesh)
+            params = jax.jit(functools.partial(init_params, specs),
+                             out_shardings=ps)(jax.random.key(0))
+            opt = adamw.init_opt_state(params)
+            step = jax.jit(steps_mod.make_train_step(
+                cfg, adamw.OptConfig(total_steps=steps),
+                grad_shardings=ps))
+            place = lambda b: {
+                k: jax.device_put(jnp.asarray(v),
+                                  shd.batch_sharding(mesh, v.shape))
+                for k, v in b.items()}
+            params, opt, m = step(params, opt, place(stream.batch(0)))
+            jax.block_until_ready(m["loss"])  # compile + warm
+            t0 = time.perf_counter()
+            for s in range(1, steps + 1):
+                params, opt, m = step(params, opt, place(stream.batch(s)))
+            jax.block_until_ready(m["loss"])
+            dt = (time.perf_counter() - t0) / steps
+        ndev = len(jax.devices())
+        print(json.dumps({
+            "devices": ndev,
+            "steps_per_s": round(1.0 / dt, 3),
+            "tok_per_s": round(B * n / dt, 1),
+            "tok_per_s_per_device": round(B * n / dt / ndev, 1),
+        }))
+    """)
+    entries = []
+    for ndev in (1, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+        env["PYTHONPATH"] = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", body], capture_output=True, text=True,
+            timeout=900, env=env,
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        r = json.loads(proc.stdout.strip().splitlines()[-1])
+        entries.append(r)
+        rows.append((
+            f"distributed/train_dev{r['devices']}",
+            1e6 / r["steps_per_s"],
+            f"tok_per_s={r['tok_per_s']} per_device={r['tok_per_s_per_device']}",
+        ))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "distributed.json"), "w") as f:
+        json.dump({
+            "backend": "cpu-host-mesh",
+            "shape": {"B": B, "n": n, "arch": "hla-1b-reduced"},
+            "entries": entries,
+        }, f, indent=1)
+
+
+BENCHES = {
+    "bench_equivalence": bench_equivalence,
+    "bench_complexity": bench_complexity,
+    "bench_statesize": bench_statesize,
+    "bench_chunkwidth": bench_chunkwidth,
+    "bench_kernels": bench_kernels,
+    "bench_train_step": bench_train_step,
+    "bench_decode_throughput": bench_decode_throughput,
+    "bench_serving": bench_serving,
+    "bench_distributed": bench_distributed,
+}
+
+# bench_distributed spawns its own multi-device subprocesses — too slow
+# for the default everything run; select it explicitly.
+DEFAULT_BENCHES = [k for k in BENCHES if k != "bench_distributed"]
+
+
+def main(argv=None) -> None:
+    """``python -m benchmarks.run [bench_name ...]`` — no args runs the
+    default set (everything except the subprocess-spawning
+    ``bench_distributed``)."""
+    import sys
+
+    names = list(argv if argv is not None else sys.argv[1:]) or list(
+        DEFAULT_BENCHES
+    )
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown benches {unknown}; have {list(BENCHES)}")
     rows = []
-    bench_equivalence(rows)
-    bench_complexity(rows)
-    bench_statesize(rows)
-    bench_chunkwidth(rows)
-    bench_kernels(rows)
-    bench_train_step(rows)
-    bench_decode_throughput(rows)
-    bench_serving(rows)
+    for n in names:
+        BENCHES[n](rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

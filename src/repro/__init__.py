@@ -1,0 +1,16 @@
+"""repro — Higher-order Linear Attention, production-scale jax/pallas.
+
+Importing the package configures jax for sharding-invariant numerics:
+
+* ``jax_threefry_partitionable=True`` — without it, ``jax.random.*`` values
+  drawn under ``jit`` depend on the *output sharding* XLA assigns (the
+  legacy threefry lowering materializes per-shard counters), so the same
+  init key produced different parameters on a (2, 4) mesh than on a single
+  device — the root cause of the pjit-vs-single-device training divergence
+  (tests/test_distributed.py).  The partitionable form makes every draw a
+  pure function of (key, position), identical under any mesh.
+"""
+
+import jax as _jax
+
+_jax.config.update("jax_threefry_partitionable", True)

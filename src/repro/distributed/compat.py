@@ -1,0 +1,38 @@
+"""Version-portable imports for distributed primitives.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to
+``jax.shard_map`` (and its ``check_rep`` knob was renamed ``check_vma``)
+across jax releases; every call site in this repo — and the distributed
+tests — goes through this shim so the repo runs on whichever jax the
+image bakes in.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _shard_map = jax.shard_map
+else:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f=None, **kwargs):
+    """``shard_map(f, mesh=..., in_specs=..., out_specs=...)``.
+
+    Accepts both ``check_rep`` (old) and ``check_vma`` (new) and translates
+    to whatever the underlying jax exposes.  Usable directly or as a
+    ``functools.partial``-style decorator (``shard_map(mesh=...)(f)``).
+    """
+    if "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if f is None:
+        return functools.partial(shard_map, **kwargs)
+    return _shard_map(f, **kwargs)

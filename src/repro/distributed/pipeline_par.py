@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 
 def pipelined_forward(
     layer_fn,  # (layer_params, x) -> x   (one layer)
@@ -37,10 +39,11 @@ def pipelined_forward(
     M = x_microbatches.shape[0]
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),
+        check_rep=False,
     )
     def run(params_local, xs):
         # params_local: (L/S, ...) this stage's layers; xs: (M, mb, n, d)

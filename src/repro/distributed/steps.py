@@ -13,7 +13,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models import lm, whisper
@@ -27,14 +26,15 @@ from . import sharding as shd
 # --------------------------------------------------------------------------
 
 
-def _loss_fn(params, batch, cfg):
+def _loss_fn(params, batch, cfg, denom=None, aux_weight=1.0):
     if cfg.enc_layers:
         return whisper.whisper_loss(
-            params, batch["tokens"], batch["labels"], batch["frames"], cfg
+            params, batch["tokens"], batch["labels"], batch["frames"], cfg,
+            denom=denom, aux_weight=aux_weight,
         )
     return lm.lm_loss(
         params, batch["tokens"], batch["labels"], cfg,
-        vis_embed=batch.get("vis_embed"),
+        vis_embed=batch.get("vis_embed"), denom=denom, aux_weight=aux_weight,
     )
 
 
@@ -66,8 +66,15 @@ def make_train_step(
 
     microbatches > 1 accumulates gradients with a lax.scan (memory/overlap
     trade; DP gradient reduction overlaps the next microbatch's compute).
+    Accumulation is **exact**: each microbatch loss is normalized by the
+    *global* valid-token count (computed from the labels before the scan)
+    so the summed gradients equal the full-batch mean-CE gradient — the old
+    mean-of-per-microbatch-means drifted whenever label masking left the
+    microbatches with uneven token counts.  The MoE aux term stays a mean
+    over microbatches (router statistics are not decomposable).
     ``grad_shardings`` (pytree of NamedSharding, like params) pins the
-    accumulator layout — without it GSPMD may replicate the fp32 buffer.
+    gradient/accumulator layout — without it GSPMD may replicate the fp32
+    buffer or reassociate the reduction differently per step.
     """
 
     def _pin(tree):
@@ -85,11 +92,20 @@ def make_train_step(
             (loss, (ce, aux)), grads = jax.value_and_grad(
                 _loss_fn, has_aux=True
             )(params, batch, cfg)
+            grads = _pin(grads)
         else:
+            # global CE normalizer, known before any model evaluation
+            n_valid = jnp.maximum(
+                jnp.sum((batch["labels"] >= 0).astype(jnp.float32)), 1.0
+            )
+
             def micro(carry, mb):
                 acc, = carry
+                # loss_i = ce_sum_i / n_valid + aux_i / M  =>  sum over
+                # microbatches == full-batch loss; gradients accumulate
+                # with NO post-hoc rescaling.
                 (l, (c, a)), g = jax.value_and_grad(_loss_fn, has_aux=True)(
-                    params, mb, cfg
+                    params, mb, cfg, n_valid, 1.0 / microbatches
                 )
                 acc = _pin(jax.tree.map(
                     lambda x, y: x + y.astype(acc_dtype), acc, g
@@ -102,9 +118,8 @@ def make_train_step(
             zeros = _pin(jax.tree.map(
                 lambda p: jnp.zeros(p.shape, acc_dtype), params
             ))
-            (gsum,), (ls, cs, aus) = jax.lax.scan(micro, (zeros,), mbs)
-            grads = jax.tree.map(lambda g: g / microbatches, gsum)
-            loss, ce, aux = ls.mean(), cs.mean(), aus.mean()
+            (grads,), (ls, cs, aus) = jax.lax.scan(micro, (zeros,), mbs)
+            loss, ce, aux = ls.sum(), cs.sum(), aus.mean()
         params, opt_state, om = adamw.adamw_update(
             params, grads, opt_state, opt_cfg
         )
@@ -198,26 +213,28 @@ def input_specs(cfg, shape_cfg, mesh):
     return {"batch": batch, "states": states}
 
 
-def _state_spec_for_leaf(x, mesh):
-    """Heuristic logical axes for a stacked state leaf (see DESIGN.md §4):
-    dim0 = layers (replicated), dim1 = batch (pod+data), then the first
-    remaining dim divisible by the model-axis size is sharded on "model"."""
-    shape = x.shape
-    parts = [None] * len(shape)
-    present = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    if len(shape) >= 2:
-        size = int(np.prod([mesh.shape[a] for a in present])) if present else 1
-        if present and shape[1] % size == 0:
-            parts[1] = present if len(present) > 1 else present[0]
-        elif "data" in mesh.axis_names and shape[1] % mesh.shape["data"] == 0:
-            parts[1] = "data"
-    if "model" in mesh.axis_names:
-        msize = mesh.shape["model"]
-        for i in range(2, len(shape)):
-            if shape[i] % msize == 0 and shape[i] >= msize:
-                parts[i] = "model"
-                break
-    return NamedSharding(mesh, P(*parts))
+def state_axes(cfg):
+    """Logical axes for every decode-state leaf — delegated to the model
+    modules (``lm.lm_state_axes`` / ``whisper.whisper_state_axes``), the
+    single sharding source of truth.  Replaces the old shape heuristic
+    (first dim divisible by the model axis), which mis-sharded any state
+    whose feature dim happened to divide the axis size."""
+    if cfg.enc_layers:
+        return whisper.whisper_state_axes(cfg)
+    return lm.lm_state_axes(cfg)
+
+
+def state_shardings_for(cfg, mesh, states):
+    """NamedSharding tree for a concrete/abstract decode-state tree.
+
+    Resolves ``state_axes`` against the mesh with the usual divisibility
+    fallback.  Used by the serving state pool so slot states live sharded
+    (batch=slots on data, heads on model) instead of replicated.
+    """
+    return jax.tree.map(
+        lambda x, ax: NamedSharding(mesh, shd.spec_for(ax, x.shape, mesh)),
+        states, state_axes(cfg),
+    )
 
 
 def state_specs(cfg, B, max_len, mesh):
@@ -229,10 +246,11 @@ def state_specs(cfg, B, max_len, mesh):
     else:
         abstract = jax.eval_shape(lambda: lm.lm_init_states(cfg, B, max_len))
     return jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(
-            x.shape, x.dtype, sharding=_state_spec_for_leaf(x, mesh)
+        lambda x, ax: jax.ShapeDtypeStruct(
+            x.shape, x.dtype,
+            sharding=NamedSharding(mesh, shd.spec_for(ax, x.shape, mesh)),
         ),
-        abstract,
+        abstract, state_axes(cfg),
     )
 
 

@@ -28,6 +28,7 @@ a chunk multiple and slice the results back.
 
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -39,6 +40,13 @@ from ..core.hla2 import HLA2State, hla2_chunkwise
 from .ahla_chunk import ahla_chunk_bwd_pallas, ahla_chunk_pallas
 from .decode_step import ahla_step_pallas, hla2_step_pallas
 from .hla2_chunk import hla2_chunk_bwd_pallas, hla2_chunk_pallas
+
+
+# Trace-time dispatch counters: incremented whenever a Pallas path is
+# *traced* (wrapper Python runs under jit/shard_map tracing).  The
+# distributed tests use these to assert the sharded train step really
+# lowered the fused kernels rather than the jnp fallback.
+TRACE_COUNTS = collections.Counter()
 
 
 def _merge_bh(x):
@@ -77,6 +85,7 @@ def _hla2_vjp_fwd(
 ):
     if use_pallas and fused_bwd:
         # fused training path: forward checkpoints per-chunk incoming states
+        TRACE_COUNTS["hla2_fwd_fused"] += 1
         qf, B, H = _merge_bh(q)
         kf, _, _ = _merge_bh(k)
         vf, _, _ = _merge_bh(v)
@@ -97,6 +106,7 @@ def _hla2_vjp_bwd(chunk, normalize, eps, lam, use_pallas, fused_bwd, res, g):
     q, k, v, gamma, chunk_states = res
 
     if use_pallas and fused_bwd:
+        TRACE_COUNTS["hla2_bwd_fused"] += 1
         qf, B, H = _merge_bh(q)
         kf, _, _ = _merge_bh(k)
         vf, _, _ = _merge_bh(v)
@@ -168,6 +178,7 @@ def _ahla_fwd_core(q, k, v, gamma, chunk, normalize, eps, use_pallas,
 def _ahla_vjp_fwd(q, k, v, gamma, chunk, normalize, eps, use_pallas,
                   fused_bwd):
     if use_pallas and fused_bwd:
+        TRACE_COUNTS["ahla_fwd_fused"] += 1
         qf, B, H = _merge_bh(q)
         kf, _, _ = _merge_bh(k)
         vf, _, _ = _merge_bh(v)
@@ -188,6 +199,7 @@ def _ahla_vjp_bwd(chunk, normalize, eps, use_pallas, fused_bwd, res, g):
     q, k, v, gamma, chunk_states = res
 
     if use_pallas and fused_bwd:
+        TRACE_COUNTS["ahla_bwd_fused"] += 1
         qf, B, H = _merge_bh(q)
         kf, _, _ = _merge_bh(k)
         vf, _, _ = _merge_bh(v)
@@ -255,6 +267,7 @@ def hla2_prefill(
             q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
             lam=lam, state=state,
         )
+    TRACE_COUNTS["hla2_prefill"] += 1
     qf, B, H = _merge_bh(q)
     kf, _, _ = _merge_bh(k)
     vf, _, _ = _merge_bh(v)
@@ -289,6 +302,7 @@ def ahla_prefill(
             q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
             state=state,
         )
+    TRACE_COUNTS["ahla_prefill"] += 1
     qf, B, H = _merge_bh(q)
     kf, _, _ = _merge_bh(k)
     vf, _, _ = _merge_bh(v)
@@ -331,6 +345,7 @@ def hla2_decode_step(
             state, q_t, k_t, v_t, gamma, normalize=normalize, eps=eps,
             lam=lam,
         )
+    TRACE_COUNTS["hla2_decode_step"] += 1
     new_state, o = hla2_step_pallas(
         tuple(state), q_t, k_t, v_t, gamma, normalize=normalize, eps=eps,
         lam=lam,
@@ -349,6 +364,7 @@ def ahla_decode_step(
         return ahla_step(
             state, q_t, k_t, v_t, gamma, normalize=normalize, eps=eps
         )
+    TRACE_COUNTS["ahla_decode_step"] += 1
     new_state, o = ahla_step_pallas(
         tuple(state), q_t, k_t, v_t, gamma, normalize=normalize, eps=eps
     )

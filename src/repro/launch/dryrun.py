@@ -160,6 +160,10 @@ def lower_cell(arch, shape_name, mesh, *, mixer=None, microbatches=1,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax version drift: cost_analysis() is a per-device list of dicts on
+    # some releases and a flat dict on others
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # loop-aware per-device account (cost_analysis counts while bodies ONCE
     # — see repro/analysis/hlo_analysis.py); raw numbers kept alongside.

@@ -6,19 +6,37 @@ admission, step-locked block decode, and device-side sampling
 
     PYTHONPATH=src python -m repro.launch.serve --arch hla-1b --reduced \
         --slots 4 --requests 8 --gen-len 32 --block 8 --sampling greedy
+
+``HOST_DEVICES=N`` simulates an N-device host mesh (like launch.train);
+params and slot states then come up sharded via the same
+``distributed.sharding`` / ``distributed.steps`` source of truth the
+trainer uses.
 """
 
-import argparse
-import time
+import os
 
-import jax
-import numpy as np
+# must run at import, before jax initializes its backend: XLA locks the
+# host device count on first use (same contract as launch/train.py)
+_hd = os.environ.get("HOST_DEVICES")
+if _hd:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_hd} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
-from ..configs import get_config
-from ..models import lm
-from ..models.param import init_params
-from ..serving import Engine, GenRequest, SamplingConfig
-from .mesh import make_mesh
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs import get_config  # noqa: E402
+from ..distributed import sharding as shd  # noqa: E402
+from ..models import lm  # noqa: E402
+from ..models.param import init_params  # noqa: E402
+from ..serving import Engine, GenRequest, SamplingConfig  # noqa: E402
+from .mesh import make_mesh, mesh_summary  # noqa: E402
 
 
 def main(argv=None):
@@ -39,9 +57,14 @@ def main(argv=None):
 
     cfg = get_config(args.arch, reduced=args.reduced)
     mesh = make_mesh()
+    print(f"[serve] {cfg.name} on {mesh_summary(mesh)}")
     rng = np.random.RandomState(args.seed)
     with mesh:
-        params = init_params(lm.lm_specs(cfg), jax.random.key(args.seed))
+        specs = lm.lm_specs(cfg)
+        params = jax.jit(
+            functools.partial(init_params, specs),
+            out_shardings=shd.param_shardings(specs, mesh),
+        )(jax.random.key(args.seed))
         engine = Engine(
             cfg, params,
             slots=args.slots,
@@ -52,6 +75,7 @@ def main(argv=None):
             ),
             block=args.block,
             seed=args.seed,
+            mesh=mesh,
         )
         requests = [
             GenRequest(

@@ -10,13 +10,14 @@ from the deterministic synthetic stream.
 
 import os
 
-if __name__ == "__main__" or True:
-    _hd = os.environ.get("HOST_DEVICES")
-    if _hd:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={_hd} "
-            + os.environ.get("XLA_FLAGS", "")
-        )
+# must run at import, before jax initializes its backend: XLA locks the
+# host device count on first use
+_hd = os.environ.get("HOST_DEVICES")
+if _hd:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_hd} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 import argparse  # noqa: E402
 import functools  # noqa: E402
@@ -57,7 +58,9 @@ def main(argv=None):
     print(f"[train] {cfg.name} on {mesh_summary(mesh)}")
 
     specs = steps_mod.model_specs(cfg)
-    pshard = shd.param_shardings(specs, mesh)
+    # one sharding source of truth: params + ZeRO-1 optimizer moments from
+    # distributed.steps.make_shardings (what dryrun lowers against too)
+    pshard, opt_shard = steps_mod.make_shardings(cfg, mesh)
     opt_cfg = adamw.OptConfig(
         lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5)
     )
@@ -65,7 +68,9 @@ def main(argv=None):
         params = jax.jit(
             functools.partial(init_params, specs), out_shardings=pshard
         )(jax.random.key(args.seed))
-        opt_state = adamw.init_opt_state(params)
+        opt_state = jax.jit(
+            adamw.init_opt_state, out_shardings=opt_shard
+        )(params)
         step_fn = jax.jit(
             steps_mod.make_train_step(
                 cfg, opt_cfg, microbatches=args.microbatches,

@@ -119,6 +119,19 @@ def init_kv_cache(B, Hk, max_len, dh, dtype=jnp.bfloat16) -> KVCache:
     )
 
 
+def kv_cache_axes() -> KVCache:
+    """Logical axes per cache leaf (state-sharding source of truth):
+    batch over data, KV heads over model, time/feature replicated; the
+    shared ``length`` scalar is replicated."""
+    from .param import Axes
+
+    return KVCache(
+        k=Axes(("batch", "kv_heads", None, None)),
+        v=Axes(("batch", "kv_heads", None, None)),
+        length=Axes(()),
+    )
+
+
 def attention_apply(
     p,
     x: jax.Array,  # (B, n, d)

@@ -135,6 +135,20 @@ def layer_init_state(cfg, kind: str, B: int, max_len: int):
     raise ValueError(kind)
 
 
+def layer_state_axes(cfg, kind: str):
+    """Logical axes matching ``layer_init_state``'s tree (per-module
+    source of truth; ``lm_state_axes`` adds the "layers" stacking dim)."""
+    if kind == "attn":
+        return attn_mod.kv_cache_axes()
+    if kind == "mixer":
+        return mixer_mod.mixer_state_axes(cfg)
+    if kind == "mamba":
+        return ssm_mod.mamba_state_axes()
+    if kind == "rwkv6":
+        return rwkv_mod.rwkv6_state_axes()
+    raise ValueError(kind)
+
+
 # --------------------------------------------------------------------------
 # stacks
 # --------------------------------------------------------------------------
@@ -223,6 +237,26 @@ def lm_init_states(cfg, B: int, max_len: int):
     one = layer_init_state(cfg, kind, B, max_len)
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+    )
+
+
+def lm_state_axes(cfg):
+    """Pytree of ``Axes`` matching ``lm_init_states`` leaf-for-leaf — the
+    single sharding source of truth for decode/serving states
+    (``distributed.steps.state_specs`` resolves these against a mesh).
+    """
+    from .param import Axes
+
+    if cfg.group_size:
+        one = {
+            f"pos{i}": layer_state_axes(cfg, kind)
+            for i, (kind, _) in enumerate(_group_layout(cfg))
+        }
+    else:
+        one = layer_state_axes(cfg, _mixer_kind(cfg))
+    return jax.tree.map(
+        lambda ax: Axes(("layers",) + tuple(ax)), one,
+        is_leaf=lambda x: isinstance(x, Axes),
     )
 
 
@@ -336,8 +370,17 @@ def lm_prefill(params, tokens, cfg, *, states=None, positions=None):
     return logits[:, -1], states
 
 
-def lm_loss(params, tokens, labels, cfg, *, vis_embed=None):
-    """Mean next-token CE (labels < 0 are ignored) + MoE aux.  fp32 loss."""
+def lm_loss(params, tokens, labels, cfg, *, vis_embed=None, denom=None,
+            aux_weight: float = 1.0):
+    """Mean next-token CE (labels < 0 are ignored) + MoE aux.  fp32 loss.
+
+    ``denom`` overrides the CE normalizer (default: this batch's valid-token
+    count).  Microbatched gradient accumulation passes the GLOBAL
+    valid-token count so summed microbatch gradients equal the full-batch
+    mean gradient exactly — averaging per-microbatch means is biased when
+    masking gives microbatches different valid counts.  ``aux_weight``
+    scales the aux term (1/microbatches under accumulation).
+    """
     logits, _, aux = lm_apply(
         params, tokens, cfg, mode="train", vis_embed=vis_embed
     )
@@ -348,5 +391,6 @@ def lm_loss(params, tokens, labels, cfg, *, vis_embed=None):
     safe = jnp.maximum(labels, 0)
     lse = jax.scipy.special.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
-    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-    return ce + aux, (ce, aux)
+    d = jnp.maximum(jnp.sum(mask), 1.0) if denom is None else denom
+    ce = jnp.sum((lse - ll) * mask) / d
+    return ce + aux_weight * aux, (ce, aux)

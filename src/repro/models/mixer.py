@@ -19,6 +19,7 @@ hla3_paper / linattn), with:
 
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -34,9 +35,10 @@ core_hla2 = importlib.import_module("repro.core.hla2")
 core_hla3 = importlib.import_module("repro.core.hla3")
 core_lin = importlib.import_module("repro.core.linear_attn")
 from ..kernels import ops as kops
+from ..distributed import shard_ops
 from ..distributed.sharding import constrain
 from .blocks import dense_apply, dense_specs
-from .param import Spec
+from .param import Axes, Spec
 
 
 class MixerState(NamedTuple):
@@ -92,6 +94,21 @@ def _out_norm(p, o, cfg, eps=1e-6):
     return (o32 * p["out_scale"][None, :, None, :]).astype(o.dtype)
 
 
+def _pallas_enabled(hc) -> bool:
+    """Fused Pallas kernels: native on TPU; elsewhere only when
+    ``force_pallas`` opts into interpret mode (distributed tests/CI)."""
+    return hc.use_pallas and (
+        jax.default_backend() == "tpu" or hc.force_pallas
+    )
+
+
+# output ranks for shard_ops.call_sharded (avoids an eval_shape re-trace
+# of the kernel per compile): state leaves are (B, H, d, d)/(B, H, d, dv)
+# rank 4 and (B, H, d) rank 3; o is (B, H, n, dv); o_t is (B, H, dv).
+_HLA2_STATE_NDIMS = core_hla2.HLA2State(4, 4, 3, 4, 3)
+_AHLA_STATE_NDIMS = core_ahla.AHLAState(4, 4, 3, 4, 3)
+
+
 def _variant(cfg):
     """The operator actually requested: cfg.mixer names it when it is an
     HLA-family mixer (the config override path sets cfg.mixer, not
@@ -114,8 +131,11 @@ def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
     gamma = _gamma(p, cfg, B)
     # hla2/ahla prefill (want_state) rides the stateful kernel API
     # (kops.*_prefill returns the final carry); other variants still fall
-    # back to the jnp chunkwise path when states are needed.
-    use_pallas = hc.use_pallas and jax.default_backend() == "tpu"
+    # back to the jnp chunkwise path when states are needed.  Inside a mesh
+    # the kernel calls go through ``shard_ops.call_sharded``: each device
+    # runs the fused kernel on its local (batch x head) row block
+    # (batch -> "pod"/"data", heads -> "model"; DESIGN.md §9).
+    use_pallas = _pallas_enabled(hc)
     kw = dict(normalize=hc.normalize, eps=1e-6)
     variant = _variant(cfg)
 
@@ -127,13 +147,21 @@ def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
         elif use_pallas and (want_state or state is not None):
             # one chunk-parallel kernel call prefills the whole prompt and
             # hands back the exact streaming state (Section-4 identity)
-            o, st = kops.hla2_prefill(
-                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, state=state, **kw
+            fn = functools.partial(
+                kops.hla2_prefill, chunk=hc.chunk, lam=hc.lam, **kw
+            )
+            o, st = shard_ops.call_sharded(
+                lambda q_, k_, v_, g_, s_: fn(q_, k_, v_, g_, state=s_),
+                q, k, v, gamma, state,
+                out_ndims=(4, _HLA2_STATE_NDIMS),
             )
         elif use_pallas:
-            o = kops.hla2_attention(
-                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam,
-                fused_bwd=hc.fused_bwd, **kw
+            o = shard_ops.call_sharded(
+                functools.partial(
+                    kops.hla2_attention, chunk=hc.chunk, lam=hc.lam,
+                    fused_bwd=hc.fused_bwd, **kw
+                ),
+                q, k, v, gamma, out_ndims=4,
             )
             st = None
         else:
@@ -144,12 +172,19 @@ def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
         if hc.impl == "scan":
             o, st = core_ahla.ahla_scan(q, k, v, gamma, state=state, **kw)
         elif use_pallas and (want_state or state is not None):
-            o, st = kops.ahla_prefill(
-                q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+            fn = functools.partial(kops.ahla_prefill, chunk=hc.chunk, **kw)
+            o, st = shard_ops.call_sharded(
+                lambda q_, k_, v_, g_, s_: fn(q_, k_, v_, g_, state=s_),
+                q, k, v, gamma, state,
+                out_ndims=(4, _AHLA_STATE_NDIMS),
             )
         elif use_pallas:
-            o = kops.ahla_attention(
-                q, k, v, gamma, chunk=hc.chunk, fused_bwd=hc.fused_bwd, **kw
+            o = shard_ops.call_sharded(
+                functools.partial(
+                    kops.ahla_attention, chunk=hc.chunk,
+                    fused_bwd=hc.fused_bwd, **kw
+                ),
+                q, k, v, gamma, out_ndims=4,
             )
             st = None
         else:
@@ -175,6 +210,18 @@ def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
     o = o.swapaxes(1, 2).reshape(B, n, cfg.n_heads * cfg.head_dim)
     o = constrain(o, ("batch", None, "q_heads_flat"))
     return dense_apply(p["wo"], o), st
+
+
+def mixer_state_axes(cfg):
+    """Logical axes per state leaf — every mixer state leaf is a
+    ``(batch, heads, ...)`` row tensor, so heads shard on "model" exactly
+    like the kernel row grid (the sharding source of truth for decode
+    states; consumed by ``distributed.steps.state_specs``)."""
+    abstract = jax.eval_shape(lambda: mixer_init_state(cfg, 1))
+    return jax.tree.map(
+        lambda x: Axes(("batch", "q_heads") + (None,) * (x.ndim - 2)),
+        abstract,
+    )
 
 
 def mixer_init_state(cfg, B, dtype=jnp.float32):
@@ -206,12 +253,14 @@ def mixer_step(p, x_t, state, cfg):
     q1, k1, v1 = q[..., 0, :], k[..., 0, :], v[..., 0, :]
     gamma = _gamma(p, cfg, B)
     kw = dict(normalize=hc.normalize, eps=1e-6)
-    fused_step = hc.use_pallas and jax.default_backend() == "tpu"
+    fused_step = _pallas_enabled(hc)
     variant = _variant(cfg)
     if variant == "hla2":
         if fused_step:
-            state, o = kops.hla2_decode_step(
-                state, q1, k1, v1, gamma, lam=hc.lam, **kw
+            state, o = shard_ops.call_sharded(
+                functools.partial(kops.hla2_decode_step, lam=hc.lam, **kw),
+                state, q1, k1, v1, gamma,
+                out_ndims=(_HLA2_STATE_NDIMS, 3),
             )
         else:
             state, o = core_hla2.hla2_step(
@@ -219,7 +268,11 @@ def mixer_step(p, x_t, state, cfg):
             )
     elif variant == "ahla":
         if fused_step:
-            state, o = kops.ahla_decode_step(state, q1, k1, v1, gamma, **kw)
+            state, o = shard_ops.call_sharded(
+                functools.partial(kops.ahla_decode_step, **kw),
+                state, q1, k1, v1, gamma,
+                out_ndims=(_AHLA_STATE_NDIMS, 3),
+            )
         else:
             state, o = core_ahla.ahla_step(state, q1, k1, v1, gamma, **kw)
     elif variant == "hla3":

@@ -16,6 +16,7 @@ plus None for replicated dims.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
@@ -38,6 +39,22 @@ class Spec:
 
 def is_spec(x) -> bool:
     return isinstance(x, Spec)
+
+
+class Axes(tuple):
+    """A logical-axes tuple that is a pytree *leaf* (plain tuples flatten).
+
+    Used by the ``*_state_axes`` helpers so state-axis trees can be
+    ``jax.tree.map``-ed against state templates without descending into the
+    axis names themselves.  Being a tuple subclass it feeds straight into
+    ``distributed.sharding.spec_for``.
+    """
+
+    __slots__ = ()
+
+
+def is_axes(x) -> bool:
+    return isinstance(x, Axes)
 
 
 def _leaf_paths(tree, prefix=()):
@@ -73,12 +90,17 @@ def _init_leaf(spec: Spec, rng: jax.Array) -> jax.Array:
 
 
 def init_params(specs, rng: jax.Array):
-    """Materialize a param pytree; rng folded per leaf path (stable)."""
+    """Materialize a param pytree; rng folded per leaf path (stable).
+
+    The per-path fold-in uses ``zlib.crc32`` — NOT builtin ``hash``, which
+    is salted per process (PYTHONHASHSEED) and made "identical seed"
+    initializations differ across launches/restarts.
+    """
     out = {}
     for path, spec in _leaf_paths(specs):
         key = rng
         for p in path:
-            key = jax.random.fold_in(key, hash(p) % (2**31))
+            key = jax.random.fold_in(key, zlib.crc32(p.encode()) % (2**31))
         node = out
         for p in path[:-1]:
             node = node.setdefault(p, {})

@@ -208,3 +208,16 @@ def rwkv6_init_state(cfg, B, dtype=jnp.float32) -> RWKVState:
         x_prev_c=jnp.zeros((B, 1, d), jnp.bfloat16),
         S=jnp.zeros((B, H, dh, dh), dtype),
     )
+
+
+def rwkv6_state_axes() -> RWKVState:
+    """Logical axes per state leaf (wkv heads shard like query heads —
+    divisibility fallback replicates when d/rwkv_head_dim doesn't divide
+    the model axis)."""
+    from .param import Axes
+
+    return RWKVState(
+        x_prev_t=Axes(("batch", None, None)),
+        x_prev_c=Axes(("batch", None, None)),
+        S=Axes(("batch", "q_heads", None, None)),
+    )

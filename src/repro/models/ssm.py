@@ -161,3 +161,13 @@ def mamba_init_state(cfg, B, dtype=jnp.float32) -> MambaState:
         conv=jnp.zeros((B, mc.d_conv - 1, d_in), jnp.bfloat16),
         h=jnp.zeros((B, d_in, mc.d_state), dtype),
     )
+
+
+def mamba_state_axes() -> MambaState:
+    """Logical axes per state leaf: d_inner shards with the "inner" rule."""
+    from .param import Axes
+
+    return MambaState(
+        conv=Axes(("batch", None, "inner")),
+        h=Axes(("batch", "inner", None)),
+    )

@@ -211,12 +211,42 @@ def whisper_init_states(cfg, B, max_len):
     )
 
 
-def whisper_loss(params, tokens, labels, frames, cfg):
+def whisper_state_axes(cfg):
+    """Logical axes matching ``whisper_init_states`` (incl. the "layers"
+    stacking dim) — see ``lm.lm_state_axes``."""
+    from .param import Axes
+
+    if cfg.mixer == "softmax":
+        self_ax = attn_mod.kv_cache_axes()
+    else:
+        self_ax = mixer_mod.mixer_state_axes(cfg)
+    one = {
+        "self": self_ax,
+        "cross_k": Axes(("batch", "kv_heads", None, None)),
+        "cross_v": Axes(("batch", "kv_heads", None, None)),
+    }
+    return jax.tree.map(
+        lambda ax: Axes(("layers",) + tuple(ax)), one,
+        is_leaf=lambda x: isinstance(x, Axes),
+    )
+
+
+def whisper_loss(params, tokens, labels, frames, cfg, *, denom=None,
+                 aux_weight: float = 1.0):
+    """Mean next-token CE over valid labels.
+
+    ``denom`` overrides the normalizer (default: this batch's valid-token
+    count) — microbatched gradient accumulation passes the GLOBAL count so
+    summed microbatch gradients equal the full-batch mean gradient exactly
+    (mean-of-means over unevenly masked microbatches is biased).
+    ``aux_weight`` scales the aux term (1/microbatches under accumulation).
+    """
     logits, _, aux = whisper_apply(params, tokens, frames, cfg, mode="train")
     logits = logits.astype(jnp.float32)
     mask = (labels >= 0).astype(jnp.float32)
     safe = jnp.maximum(labels, 0)
     lse = jax.scipy.special.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
-    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-    return ce + aux, (ce, aux)
+    d = jnp.maximum(jnp.sum(mask), 1.0) if denom is None else denom
+    ce = jnp.sum((lse - ll) * mask) / d
+    return ce + aux_weight * aux, (ce, aux)

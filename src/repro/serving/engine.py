@@ -26,6 +26,7 @@ concern (the HLA family is the paper's point).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -70,6 +71,7 @@ class Engine:
         sampling: SamplingConfig = SamplingConfig(),
         block: int = 8,
         seed: int = 0,
+        mesh=None,
     ):
         if cfg.mixer not in STREAMING_MIXERS or cfg.group_size:
             raise ValueError(
@@ -82,8 +84,23 @@ class Engine:
         self.params = params
         self.sampling = sampling
         self.block = block
+        self.mesh = mesh
+        # sharded serving: slot states get explicit shardings (slots on
+        # the data axis, heads on the model axis) from the same source of
+        # truth the train/dry-run steps use — never a replicated tree.
+        pool_shardings = None
+        if mesh is not None:
+            from ..distributed import steps as steps_mod
+
+            abstract = jax.eval_shape(
+                lambda: lm.lm_init_states(cfg, slots, max_len)
+            )
+            pool_shardings = steps_mod.state_shardings_for(
+                cfg, mesh, abstract
+            )
         self.pool = StatePool(
-            lambda n: lm.lm_init_states(cfg, n, max_len), slots
+            lambda n: lm.lm_init_states(cfg, n, max_len), slots,
+            shardings=pool_shardings,
         )
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
         self.positions = jnp.zeros((slots, 1), jnp.int32)
@@ -122,11 +139,25 @@ class Engine:
             (states, tok, pos, _), toks = jax.lax.scan(
                 body, (states, tokens, positions, key), length=n_steps
             )
+            if pool_shardings is not None:
+                # pin the block's state output to the pool layout — the
+                # scatter writes pin admissions, this pins the hot path,
+                # so GSPMD never drifts the pool and re-lowers
+                states = jax.tree.map(
+                    jax.lax.with_sharding_constraint, states, pool_shardings
+                )
             return states, tok, pos, toks  # toks: (n_steps, slots)
 
         self._prefill = jax.jit(_prefill)
         self._decode_block = jax.jit(
             _decode_block, static_argnames="n_steps"
+        )
+
+    def _mesh_ctx(self):
+        """Activate the engine's mesh (mixer shard_map dispatch + logical
+        sharding constraints resolve against the ambient mesh)."""
+        return self.mesh if self.mesh is not None else (
+            contextlib.nullcontext()
         )
 
     # -- admission ----------------------------------------------------------
@@ -145,8 +176,9 @@ class Engine:
         t0 = time.perf_counter()
         self.key, sub = jax.random.split(self.key)
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
-        first, state1 = self._prefill(self.params, prompt, sub)
-        self.pool.write_slot(slot, state1)
+        with self._mesh_ctx():
+            first, state1 = self._prefill(self.params, prompt, sub)
+            self.pool.write_slot(slot, state1)
         first_tok = int(first[0])  # one sync per admission: TTFT endpoint
         ttft = time.perf_counter() - t0
         self.tokens = self.tokens.at[slot, 0].set(first_tok)
@@ -183,10 +215,11 @@ class Engine:
         self.key, sub = jax.random.split(self.key)
         active_dev = jnp.asarray(self.active)
         t0 = time.perf_counter()
-        states, tok, pos, toks = self._decode_block(
-            self.params, self.pool.states, self.tokens, self.positions,
-            active_dev, sub, n_steps=n_steps,
-        )
+        with self._mesh_ctx():
+            states, tok, pos, toks = self._decode_block(
+                self.params, self.pool.states, self.tokens, self.positions,
+                active_dev, sub, n_steps=n_steps,
+            )
         self.pool.states = states
         self.tokens, self.positions = tok, pos
         toks_host = np.asarray(toks)  # (n_steps, slots) — the block sync

@@ -46,14 +46,30 @@ class StatePool:
     ``lambda n: lm.lm_init_states(cfg, n, max_len)``).  It is evaluated
     abstractly (``jax.eval_shape``) at ``slots`` and ``slots + 1`` to
     detect slot axes, and concretely once at ``slots`` for the pool.
+
+    ``shardings`` (optional NamedSharding pytree matching the pooled state
+    tree, from ``distributed.steps.state_shardings_for``) places the pool
+    explicitly on a mesh — slots over the data axis, heads over the model
+    axis — and pins every scatter write's output layout so admissions
+    never let GSPMD drift the pool back to replicated.
     """
 
-    def __init__(self, template_fn: Callable[[int], Any], slots: int):
+    def __init__(self, template_fn: Callable[[int], Any], slots: int,
+                 shardings=None):
         if slots < 1:
             raise ValueError("need at least one slot")
         self.slots = slots
         self._template_fn = template_fn
-        self.states = template_fn(slots)
+        self.shardings = shardings
+        if shardings is None:
+            self.states = template_fn(slots)
+        else:
+            # born sharded: never materialize the full pool replicated on
+            # one device (the transient could exceed a single device's HBM
+            # even when the sharded steady state fits)
+            self.states = jax.jit(
+                lambda: template_fn(slots), out_shardings=shardings
+            )()
         shapes_n = jax.eval_shape(lambda: template_fn(slots))
         shapes_n1 = jax.eval_shape(lambda: template_fn(slots + 1))
         leaves_n, self._treedef = jax.tree.flatten(shapes_n)
@@ -97,7 +113,12 @@ class StatePool:
                 )
             return out
 
-        self._write = jax.jit(_write)
+        if shardings is None:
+            self._write = jax.jit(_write)
+        else:
+            self._write = jax.jit(
+                _write, out_shardings=jax.tree.leaves(shardings)
+            )
         self._read = jax.jit(_read)
 
     # -- tree plumbing ------------------------------------------------------

@@ -12,6 +12,14 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "subprocess: spawns fresh python processes with a multi-device "
+        'host mesh (slow lane; skip with -m "not subprocess")',
+    )
+
+
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)
