@@ -130,6 +130,39 @@ def render_serving():
     ])
 
 
+def render_spec():
+    """§Speculative table from results/spec.json (benchmarks.run
+    bench_spec): n-gram-drafted speculative decode vs plain block decode
+    on the trained repetitive-text workload."""
+    path = os.path.join(RESULTS, "spec.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    sh = r["shape"]
+    out = [
+        "\n### §Speculative — draft/verify/rollback vs plain decode "
+        f"(backend={r['backend']}, {sh['model']}, {sh['workload']}, "
+        f"slots={sh['slots']} gen={sh['gen_len']} "
+        f"drafter={sh['drafter']})\n",
+        f"plain block decode baseline: **{r['plain_tok_per_s']:.1f} "
+        "tok/s**\n",
+        "| k | tok/s | speedup | acceptance | rounds | rollback rounds |",
+        "|---|---|---|---|---|---|",
+    ]
+    for e in r["entries"]:
+        out.append(
+            f"| {e['k']} | {e['tok_per_s']} | {e['speedup']}x | "
+            f"{e['acceptance']} | {e['rounds']} | {e['rollback_rounds']} |"
+        )
+    out.append(
+        "\n(speculative greedy output is asserted token-for-token equal "
+        "to plain greedy; interpret-mode numbers on CPU are not "
+        "indicative — compare on TPU.)"
+    )
+    return "\n".join(out)
+
+
 def render_distributed():
     """§Distributed table from results/distributed.json (benchmarks.run
     bench_distributed): per-device train tok/s, 1 -> 8 host devices."""
@@ -218,6 +251,9 @@ def main():
     sv = render_serving()
     if sv:
         text = text + "\n" + sv
+    sp = render_spec()
+    if sp:
+        text = text + "\n" + sp
     ds = render_distributed()
     if ds:
         text = text + "\n" + ds

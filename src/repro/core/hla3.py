@@ -308,6 +308,40 @@ class HLA3ChunkState(NamedTuple):
     eta: jax.Array
 
 
+def hla3_chunk_init_state(batch_shape, d, dv, dtype=jnp.float32):
+    """Zero carry for ``hla3_paper_chunkwise`` — the canonical streaming
+    state for the paper's third-order operator.  Decode steps run the
+    chunkwise path at n = 1 (``hla3_paper_chunk_step``) so prefill and
+    decode share one state layout; the 10-field ``HLA3PaperState`` remains
+    the Algorithm-3-verbatim form (serial/scan fidelity paths only).
+    """
+    z = functools.partial(jnp.zeros, dtype=dtype)
+    return HLA3ChunkState(
+        SK=z(batch_shape + (d, d)), SQ=z(batch_shape + (d, d)),
+        P=z(batch_shape + (d, dv)), m=z(batch_shape + (d,)),
+        F=z(batch_shape + (d, dv)), eta=z(batch_shape + (d,)),
+    )
+
+
+def hla3_paper_chunk_step(
+    state: HLA3ChunkState, q_t, k_t, v_t,
+    *, normalize: bool = False, eps: float = 1e-6,
+):
+    """One decode token in chunk-state space (n = 1 chunkwise call).
+
+    Keeps decode bit-consistent with ``hla3_paper_chunkwise`` prefill —
+    the Algorithm-3 step (``hla3_paper_step``) carries a different
+    (10-field) decomposition of the same operator, so mixing the two
+    layouts across prefill/decode is a tree-structure error.  gamma = 1,
+    as the paper states Algorithm 4's chunk path.
+    """
+    o, new = hla3_paper_chunkwise(
+        q_t[..., None, :], k_t[..., None, :], v_t[..., None, :],
+        chunk=1, normalize=normalize, eps=eps, state=state,
+    )
+    return new, o[..., 0, :]
+
+
 def hla3_paper_chunkwise(
     q, k, v, *, chunk: int = 64, normalize: bool = False, eps: float = 1e-6,
     state: Optional[HLA3ChunkState] = None,

@@ -7,6 +7,12 @@ admission, step-locked block decode, and device-side sampling
     PYTHONPATH=src python -m repro.launch.serve --arch hla-1b --reduced \
         --slots 4 --requests 8 --gen-len 32 --block 8 --sampling greedy
 
+``--spec ngram|lm`` turns on speculative decoding (DESIGN.md §10): the
+drafter proposes ``--spec-k`` tokens per round, one chunk-parallel verify
+call scores them, rejections roll back via state snapshots.  ``--spec lm``
+drafts with a small HLA LM loaded from the ``--draft-arch`` registry entry
+(random weights here — the CLI has no trained draft checkpoint).
+
 ``HOST_DEVICES=N`` simulates an N-device host mesh (like launch.train);
 params and slot states then come up sharded via the same
 ``distributed.sharding`` / ``distributed.steps`` source of truth the
@@ -35,7 +41,7 @@ from ..configs import get_config  # noqa: E402
 from ..distributed import sharding as shd  # noqa: E402
 from ..models import lm  # noqa: E402
 from ..models.param import init_params  # noqa: E402
-from ..serving import Engine, GenRequest, SamplingConfig  # noqa: E402
+from ..serving import Engine, GenRequest, SamplingConfig, SpecConfig  # noqa: E402
 from .mesh import make_mesh, mesh_summary  # noqa: E402
 
 
@@ -49,9 +55,18 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--block", type=int, default=8)
     ap.add_argument("--sampling", default="greedy",
-                    choices=["greedy", "temperature", "top_k"])
+                    choices=["greedy", "temperature", "top_k", "top_p"])
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--top-p", type=float, default=0.9)
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "lm"],
+                    help="speculative decoding drafter (off = plain blocks)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--draft-arch", default="hla-1b",
+                    help="configs entry for the --spec lm draft model "
+                         "(loaded reduced)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -65,17 +80,24 @@ def main(argv=None):
             functools.partial(init_params, specs),
             out_shardings=shd.param_shardings(specs, mesh),
         )(jax.random.key(args.seed))
+        spec = None
+        if args.spec != "off":
+            spec = SpecConfig(
+                k=args.spec_k, drafter=args.spec,
+                draft_arch=args.draft_arch, draft_reduced=args.reduced,
+            )
         engine = Engine(
             cfg, params,
             slots=args.slots,
             max_len=args.prompt_len + args.gen_len + 8,
             sampling=SamplingConfig(
                 method=args.sampling, temperature=args.temperature,
-                top_k=args.top_k,
+                top_k=args.top_k, top_p=args.top_p,
             ),
             block=args.block,
             seed=args.seed,
             mesh=mesh,
+            spec=spec,
         )
         requests = [
             GenRequest(
@@ -92,7 +114,8 @@ def main(argv=None):
         )])
         engine.stats.update(
             prefill_s=0.0, decode_s=0.0, prompt_tokens=0,
-            generated_tokens=0, ttft_s=[],
+            generated_tokens=0, ttft_s=[], spec_rounds=0, spec_drafted=0,
+            spec_accepted=0, spec_replays=0,
         )
         t0 = time.time()
         results = engine.run(requests)
@@ -110,6 +133,14 @@ def main(argv=None):
             f"decode {decode_tps:.1f} tok/s | "
             f"prefill {st['prompt_tokens']/max(st['prefill_s'],1e-9):.1f} tok/s"
         )
+        if spec is not None:
+            acc = st["spec_accepted"] / max(st["spec_drafted"], 1)
+            print(
+                f"[serve] spec: {st['spec_rounds']} rounds, "
+                f"acceptance {acc:.2f}, {st['spec_replays']} rollbacks, "
+                f"{decode_toks/max(st['spec_rounds'],1):.2f} committed "
+                "tok/round"
+            )
     return len(results)
 
 

@@ -370,6 +370,28 @@ def lm_prefill(params, tokens, cfg, *, states=None, positions=None):
     return logits[:, -1], states
 
 
+def lm_score_block(params, tokens, cfg, *, states, positions):
+    """Score a short token block against streaming states — the target-model
+    side of speculative verification.
+
+    One ``mode="prefill"`` pass (per layer ONE chunkwise call — the same
+    chunk-parallel path as prompt admission) over ``tokens``
+    ``(B, k+1) = [last committed token, draft_1..draft_k]`` resumed from
+    ``states``.  Returns ``(logits, new_states)`` with logits for EVERY
+    position: ``logits[:, j]`` is the target's next-token distribution
+    after consuming ``tokens[:, :j+1]``, i.e. the distribution that judges
+    ``draft_{j+1}`` (and, at ``j == k``, the bonus token).  ``new_states``
+    have consumed the whole block — exactly the post-acceptance state when
+    every draft is accepted; on rejection the caller rolls back instead
+    (serving/spec/verify.py).
+    """
+    logits, new_states, _ = lm_apply(
+        params, tokens, cfg, states=states, positions=positions,
+        mode="prefill",
+    )
+    return logits, new_states
+
+
 def lm_loss(params, tokens, labels, cfg, *, vis_embed=None, denom=None,
             aux_weight: float = 1.0):
     """Mean next-token CE (labels < 0 are ignored) + MoE aux.  fp32 loss.

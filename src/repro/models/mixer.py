@@ -212,16 +212,45 @@ def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
     return dense_apply(p["wo"], o), st
 
 
+# Per-variant state-axes registry: every HLA-family decode-state leaf is a
+# ``(batch, heads, ...feature)`` row tensor, declared field-by-field below
+# so each variant is REGISTERED explicitly (hla3/hla3_paper included — the
+# old rank-based inference silently depended on every future state leaf
+# happening to follow the row layout).  Heads shard on "model" exactly like
+# the kernel row grid; this is the sharding source of truth for decode
+# states, consumed by ``distributed.steps.state_specs`` and the serving
+# ``StatePool``.
+_ROW_MAT = Axes(("batch", "q_heads", None, None))
+_ROW_VEC = Axes(("batch", "q_heads", None))
+
+_HLA2_AXES = core_hla2.HLA2State(
+    S=_ROW_MAT, C=_ROW_MAT, m=_ROW_VEC, G=_ROW_MAT, h=_ROW_VEC
+)
+_LINATTN_AXES = core_lin.LinAttnState(P=_ROW_MAT, m=_ROW_VEC)
+
+_STATE_AXES = {
+    "hla2": _HLA2_AXES,
+    "ahla": core_ahla.AHLAState(
+        R=_ROW_MAT, P=_ROW_MAT, m=_ROW_VEC, E=_ROW_MAT, n=_ROW_VEC
+    ),
+    "hla3": core_hla3.HLA3ExactState(inner=_LINATTN_AXES, outer=_HLA2_AXES),
+    "hla3_paper": core_hla3.HLA3ChunkState(
+        SK=_ROW_MAT, SQ=_ROW_MAT, P=_ROW_MAT, m=_ROW_VEC,
+        F=_ROW_MAT, eta=_ROW_VEC,
+    ),
+    "linattn": _LINATTN_AXES,
+}
+
+
 def mixer_state_axes(cfg):
-    """Logical axes per state leaf — every mixer state leaf is a
-    ``(batch, heads, ...)`` row tensor, so heads shard on "model" exactly
-    like the kernel row grid (the sharding source of truth for decode
-    states; consumed by ``distributed.steps.state_specs``)."""
-    abstract = jax.eval_shape(lambda: mixer_init_state(cfg, 1))
-    return jax.tree.map(
-        lambda x: Axes(("batch", "q_heads") + (None,) * (x.ndim - 2)),
-        abstract,
-    )
+    """Logical axes pytree matching ``mixer_init_state`` leaf-for-leaf,
+    from the explicit per-variant registry above."""
+    variant = _variant(cfg)
+    if variant not in _STATE_AXES:
+        raise ValueError(
+            f"mixer variant {variant!r} has no state-axes registration"
+        )
+    return _STATE_AXES[variant]
 
 
 def mixer_init_state(cfg, B, dtype=jnp.float32):
@@ -234,7 +263,12 @@ def mixer_init_state(cfg, B, dtype=jnp.float32):
     if variant == "hla3":
         return core_hla3.hla3_exact_init_state((B, H), dh, dh, dtype)
     if variant == "hla3_paper":
-        return core_hla3.hla3_paper_init_state((B, H), dh, dh, dtype)
+        # chunk-state layout: prefill (hla3_paper_chunkwise) and decode
+        # (hla3_paper_chunk_step) share it; the Algorithm-3 10-field state
+        # only serves the serial/scan fidelity paths.  Using it here made
+        # serving impossible: prefill handed back a 6-field carry that
+        # could never be scattered into a 10-field pool.
+        return core_hla3.hla3_chunk_init_state((B, H), dh, dh, dtype)
     if variant == "linattn":
         return core_lin.linattn_init_state((B, H), dh, dh, dtype)
     raise ValueError(variant)
@@ -278,7 +312,10 @@ def mixer_step(p, x_t, state, cfg):
     elif variant == "hla3":
         state, o = core_hla3.hla3_exact_step(state, q1, k1, v1, gamma, **kw)
     elif variant == "hla3_paper":
-        state, o = core_hla3.hla3_paper_step(state, q1, k1, v1, gamma, **kw)
+        # n=1 chunkwise call: same state layout AND same gamma=1 semantics
+        # as the prefill path (the Alg.-3 step applied learned decay that
+        # the chunk path never saw — prefill-then-decode diverged)
+        state, o = core_hla3.hla3_paper_chunk_step(state, q1, k1, v1, **kw)
     elif variant == "linattn":
         state, o = core_lin.linattn_step(state, q1, k1, v1, gamma, **kw)
     else:

@@ -203,9 +203,15 @@ def rwkv6_init_state(cfg, B, dtype=jnp.float32) -> RWKVState:
     d = cfg.d_model
     dh = cfg.rwkv_head_dim
     H = d // dh
+    # token-shift leaves hold raw activations, so they must carry the
+    # ACTIVATION dtype: the layer writes x_prev_t = x[:, -1:] back, and a
+    # decode scan whose carry-in (init) dtype differs from its carry-out
+    # (cfg.dtype) is a trace error — hardcoded bf16 here broke serving for
+    # every fp32-activation config.
+    act = jnp.dtype(cfg.dtype)
     return RWKVState(
-        x_prev_t=jnp.zeros((B, 1, d), jnp.bfloat16),
-        x_prev_c=jnp.zeros((B, 1, d), jnp.bfloat16),
+        x_prev_t=jnp.zeros((B, 1, d), act),
+        x_prev_c=jnp.zeros((B, 1, d), act),
         S=jnp.zeros((B, H, dh, dh), dtype),
     )
 

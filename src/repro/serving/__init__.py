@@ -10,11 +10,20 @@ Layering:
 * ``engine``     — the continuous-batching loop: admissions prefill whole
                    prompts in one chunk-parallel kernel call per layer,
                    decode runs in step-locked device blocks with one host
-                   sync per block.
+                   sync per block;
+* ``spec``       — speculative decoding: drafters (n-gram / small HLA
+                   LM), chunk-parallel exact verification, and
+                   state-snapshot rollback (DESIGN.md §10).
 
 ``launch.serve`` is a thin CLI over ``engine.Engine``.
 """
 
 from .engine import Engine, GenRequest, GenResult  # noqa: F401
-from .sampling import SamplingConfig, sample  # noqa: F401
+from .sampling import SamplingConfig, probs, sample  # noqa: F401
+from .spec import (  # noqa: F401
+    Drafter,
+    HLADrafter,
+    NGramDrafter,
+    SpecConfig,
+)
 from .state_pool import StatePool  # noqa: F401

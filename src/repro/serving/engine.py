@@ -16,6 +16,19 @@ The serving pattern the paper's O(1)-state decode enables (DESIGN.md §8):
   Inactive slots ride along masked (their sampled tokens are discarded and
   their positions frozen); their stale states are overwritten at the next
   admission.
+* **Speculative decode (``spec=``)** swaps the block for a
+  draft -> verify -> accept round (DESIGN.md §10): a ``Drafter`` proposes
+  k tokens per active slot (batched), then ONE jitted round
+  (``spec.verify.make_spec_round``) scores all of them chunk-parallel,
+  commits accepted tokens in bulk — up to k+1 tokens per round for the
+  serial cost of one wide prefill — and, on rejection only (a
+  ``lax.cond`` arm), rolls the pool back to the pre-verify states
+  advanced by each slot's accepted prefix, so speculative greedy decode
+  is token-for-token identical to plain greedy decode.
+  ``StatePool.snapshot_slot``/``restore_slot`` expose the same O(state)
+  rollback primitive at the host level (external schedulers,
+  preemption, tests).  One host sync per round, as in the plain block
+  path.
 
 KV-cache (softmax / hybrid) archs are rejected: their pooled cache keeps a
 *shared* scalar ``length``, so per-slot admission would need per-slot
@@ -37,6 +50,8 @@ import numpy as np
 
 from ..models import lm
 from .sampling import SamplingConfig, sample
+from .spec import SpecConfig, build_drafter
+from .spec.verify import make_spec_round
 from .state_pool import StatePool
 
 STREAMING_MIXERS = ("hla2", "ahla", "hla3", "hla3_paper", "linattn", "rwkv6")
@@ -48,6 +63,10 @@ class GenRequest:
     prompt: np.ndarray  # (L,) int token ids
     max_new: int = 32
     eos_id: Optional[int] = None
+    # per-request sampling override (None = the engine's default).  The
+    # decode block re-traces when the SET of distinct configs across slots
+    # changes; homogeneous traffic stays at one trace.
+    sampling: Optional[SamplingConfig] = None
 
 
 @dataclasses.dataclass
@@ -72,6 +91,7 @@ class Engine:
         block: int = 8,
         seed: int = 0,
         mesh=None,
+        spec: Optional[SpecConfig] = None,
     ):
         if cfg.mixer not in STREAMING_MIXERS or cfg.group_size:
             raise ValueError(
@@ -85,6 +105,7 @@ class Engine:
         self.sampling = sampling
         self.block = block
         self.mesh = mesh
+        self.spec = spec
         # sharded serving: slot states get explicit shardings (slots on
         # the data axis, heads on the model axis) from the same source of
         # truth the train/dry-run steps use — never a replicated tree.
@@ -108,30 +129,41 @@ class Engine:
         self._slot_req: List[Optional[GenRequest]] = [None] * slots
         self._slot_out: List[List[int]] = [[] for _ in range(slots)]
         self._slot_ttft: List[float] = [0.0] * slots
+        self._slot_scfg: List[SamplingConfig] = [sampling] * slots
         self.results: Dict[int, GenResult] = {}
         self.key = jax.random.key(seed)
         self.stats = {
             "prefill_s": 0.0, "decode_s": 0.0,
             "prompt_tokens": 0, "generated_tokens": 0, "ttft_s": [],
+            "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
+            "spec_replays": 0,
         }
 
-        scfg = self.sampling
-
-        def _prefill(params, prompt, key):
+        def _prefill(params, prompt, key, scfg):
             last_logits, states = lm.lm_prefill(params, prompt, cfg)
             tok = sample(last_logits, key, scfg)
             return tok, states
 
         def _decode_block(params, states, tokens, positions, active, key,
-                          n_steps):
+                          sel, n_steps, scfgs):
+            # scfgs: the (static) canonically-ordered DISTINCT sampling
+            # configs; sel: traced (slots,) index into them.  Sampling once
+            # per distinct config keeps homogeneous traffic at the old
+            # single-sampler cost, and keying the jit on the distinct SET
+            # (not the per-slot assignment) means slot churn never
+            # recompiles — only genuinely new configs do.
             def body(carry, _):
                 states, tok, pos, key = carry
                 logits, states, _ = lm.lm_apply(
                     params, tok, cfg, states=states, positions=pos,
                     mode="decode",
                 )
-                key, sub = jax.random.split(key)
-                nxt = sample(logits[:, -1], sub, scfg)
+                key, *subs = jax.random.split(key, len(scfgs) + 1)
+                cand = jnp.stack(
+                    [sample(logits[:, -1], sk, c)
+                     for c, sk in zip(scfgs, subs)]
+                )  # (n_uniq, slots)
+                nxt = jnp.take_along_axis(cand, sel[None, :], axis=0)[0]
                 tok = jnp.where(active[:, None], nxt[:, None], tok)
                 pos = pos + active[:, None].astype(pos.dtype)
                 return (states, tok, pos, key), nxt
@@ -148,10 +180,29 @@ class Engine:
                 )
             return states, tok, pos, toks  # toks: (n_steps, slots)
 
-        self._prefill = jax.jit(_prefill)
+        self._prefill = jax.jit(_prefill, static_argnames="scfg")
         self._decode_block = jax.jit(
-            _decode_block, static_argnames="n_steps"
+            _decode_block, static_argnames=("n_steps", "scfgs")
         )
+
+        if spec is not None:
+            self.drafter = build_drafter(
+                spec, slots=slots, max_len=max_len, sampling=sampling,
+                mesh=mesh, target_cfg=cfg,
+            )
+            if self.drafter.vocab is not None and \
+                    self.drafter.vocab != cfg.vocab:
+                raise ValueError(
+                    f"drafter vocab {self.drafter.vocab} != target vocab "
+                    f"{cfg.vocab}: draft ids would index the target "
+                    "embedding out of range"
+                )
+            self._spec_step = jax.jit(make_spec_round(
+                cfg, sampling, draft_probs=self.drafter.emits_probs,
+                pool_shardings=pool_shardings,
+            ))
+        else:
+            self.drafter = None
 
     def _mesh_ctx(self):
         """Activate the engine's mesh (mixer shard_map dispatch + logical
@@ -173,11 +224,18 @@ class Engine:
         """
         if self.active[slot]:
             raise ValueError(f"slot {slot} is busy")
+        scfg = req.sampling if req.sampling is not None else self.sampling
+        if self.spec is not None and scfg != self.sampling:
+            raise ValueError(
+                "speculative mode verifies against ONE sampling law; "
+                "per-request overrides would need per-slot accept rules "
+                f"(engine={self.sampling}, request={scfg})"
+            )
         t0 = time.perf_counter()
         self.key, sub = jax.random.split(self.key)
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
         with self._mesh_ctx():
-            first, state1 = self._prefill(self.params, prompt, sub)
+            first, state1 = self._prefill(self.params, prompt, sub, scfg)
             self.pool.write_slot(slot, state1)
         first_tok = int(first[0])  # one sync per admission: TTFT endpoint
         ttft = time.perf_counter() - t0
@@ -187,10 +245,36 @@ class Engine:
         self._slot_req[slot] = req
         self._slot_out[slot] = [first_tok]
         self._slot_ttft[slot] = ttft
+        self._slot_scfg[slot] = scfg
+        if self.drafter is not None:
+            self.drafter.admit(
+                slot, [int(t) for t in req.prompt] + [first_tok]
+            )
         self.stats["prefill_s"] += ttft
         self.stats["prompt_tokens"] += len(req.prompt)
         self.stats["ttft_s"].append(ttft)
         return first_tok
+
+    def _commit(self, slot: int, toks) -> bool:
+        """Append generated tokens to ``slot``'s stream with max_new/eos
+        truncation; finish the slot when its stop condition hits.  The
+        ONE place commit semantics live — plain blocks and speculative
+        rounds must truncate identically or their streams diverge.
+        Returns True when the slot finished (and was freed)."""
+        req = self._slot_req[slot]
+        out = self._slot_out[slot]
+        for t in toks:
+            if len(out) >= req.max_new or (
+                req.eos_id is not None and out and out[-1] == req.eos_id
+            ):
+                break
+            out.append(int(t))
+        if len(out) >= req.max_new or (
+            req.eos_id is not None and req.eos_id in out
+        ):
+            self._finish(slot)
+            return True
+        return False
 
     def _finish(self, slot: int) -> None:
         req = self._slot_req[slot]
@@ -204,21 +288,33 @@ class Engine:
         self.stats["generated_tokens"] += len(out)
         self.active[slot] = False
         self._slot_req[slot] = None
+        # drop any per-request sampling override so the freed slot stops
+        # contributing a stale config to the decode block's distinct set
+        self._slot_scfg[slot] = self.sampling
+        if self.drafter is not None:
+            self.drafter.evict(slot)
 
     # -- decode -------------------------------------------------------------
 
     def step_block(self, n_steps: Optional[int] = None) -> None:
-        """Advance every active slot ``n_steps`` tokens; ONE host transfer."""
+        """Advance every active slot: ``n_steps`` plain decode tokens, or
+        ONE draft->verify->accept round (up to ``spec.k + 1`` tokens) in
+        speculative mode.  Either way: one host transfer."""
+        if self.spec is not None:
+            self._spec_round()
+            return
         n_steps = self.block if n_steps is None else n_steps
         if n_steps <= 0:
             return
         self.key, sub = jax.random.split(self.key)
         active_dev = jnp.asarray(self.active)
+        uniq = tuple(sorted(set(self._slot_scfg), key=repr))
+        sel = jnp.asarray([uniq.index(c) for c in self._slot_scfg])
         t0 = time.perf_counter()
         with self._mesh_ctx():
             states, tok, pos, toks = self._decode_block(
                 self.params, self.pool.states, self.tokens, self.positions,
-                active_dev, sub, n_steps=n_steps,
+                active_dev, sub, sel, n_steps=n_steps, scfgs=uniq,
             )
         self.pool.states = states
         self.tokens, self.positions = tok, pos
@@ -227,18 +323,75 @@ class Engine:
         for s in range(self.pool.slots):
             if not self.active[s]:
                 continue
-            req = self._slot_req[s]
-            out = self._slot_out[s]
-            for i in range(n_steps):
-                if len(out) >= req.max_new or (
-                    req.eos_id is not None and out and out[-1] == req.eos_id
-                ):
-                    break
-                out.append(int(toks_host[i, s]))
-            if len(out) >= req.max_new or (
-                req.eos_id is not None and req.eos_id in out
-            ):
-                self._finish(s)
+            self._commit(s, toks_host[:, s])
+
+    # -- speculative decode -------------------------------------------------
+
+    def _spec_round(self) -> None:
+        """draft -> verify -> accept for every active slot.
+
+        The drafter proposes k tokens per slot (batched across slots);
+        then ONE jitted call (``spec.verify.make_spec_round``) scores the
+        k+1-wide block chunk-parallel for all slots, computes per-slot
+        acceptance, rolls rejected continuations back to the pre-verify
+        state advanced by only their accepted prefix (a ``lax.cond`` arm
+        that executes exclusively on rejection rounds — full-acceptance
+        rounds keep the verify pass's own final states for free), and
+        advances tokens/positions on device.  One host transfer per round
+        (the packed accept/commit array), like the plain block path.
+        """
+        k = self.spec.k
+        slots_active = [s for s in range(self.pool.slots) if self.active[s]]
+        if not slots_active:
+            return
+        t0 = time.perf_counter()
+        drafts, qp = self.drafter.propose(slots_active, k)
+        if self.drafter.full_width:
+            # device drafter, rows for every slot: feed straight through
+            draft_full, q_full = drafts.astype(jnp.int32), qp
+        elif isinstance(drafts, np.ndarray):  # host drafter: host scatter
+            draft_full = np.zeros((self.pool.slots, k), np.int32)
+            draft_full[slots_active] = drafts
+            draft_full, q_full = jnp.asarray(draft_full), None
+            if qp is not None:
+                vocab = self.cfg.vocab
+                q_np = np.full((self.pool.slots, k, vocab), 1.0 / vocab,
+                               np.float32)
+                q_np[slots_active] = np.asarray(qp, np.float32)
+                q_full = jnp.asarray(q_np)
+        else:  # device drafter with active-row output: device scatter
+            ids = jnp.asarray(np.asarray(slots_active, np.int32))
+            draft_full = jnp.zeros((self.pool.slots, k), jnp.int32)
+            draft_full = draft_full.at[ids].set(drafts.astype(jnp.int32))
+            q_full = None
+            if qp is not None:
+                vocab = self.cfg.vocab
+                q_full = jnp.full(
+                    (self.pool.slots, k, vocab), 1.0 / vocab, jnp.float32
+                ).at[ids].set(jnp.asarray(qp, jnp.float32))
+        self.key, sub = jax.random.split(self.key)
+        args = (self.params, self.pool.states, self.tokens, self.positions,
+                jnp.asarray(self.active), draft_full, sub)
+        if self.drafter.emits_probs:
+            args = args + (q_full,)
+        with self._mesh_ctx():
+            packed, new_states, new_tokens, new_positions = \
+                self._spec_step(*args)
+        self.pool.states = new_states
+        self.tokens, self.positions = new_tokens, new_positions
+        packed_h = np.asarray(packed)  # ONE host transfer per round
+        self.stats["spec_rounds"] += 1
+        if any(int(packed_h[s, 0]) < k for s in slots_active):
+            self.stats["spec_replays"] += 1  # the rollback arm ran
+        for s in slots_active:
+            m = int(packed_h[s, 0])
+            committed = [int(t) for t in packed_h[s, 1:m + 2]]
+            self.stats["spec_drafted"] += k
+            self.stats["spec_accepted"] += m
+            if self._commit(s, committed):
+                continue  # finished: state is stale but the slot is free
+            self.drafter.commit(s, committed)
+        self.stats["decode_s"] += time.perf_counter() - t0
 
     # -- driver -------------------------------------------------------------
 

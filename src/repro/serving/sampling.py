@@ -1,10 +1,17 @@
-"""Seeded device-side token sampling (greedy / temperature / top-k).
+"""Seeded device-side token sampling (greedy / temperature / top-k / top-p).
 
-Shared by the serving engine's decode blocks and the examples — replaces
-the ad-hoc ``jnp.argmax`` calls.  ``sample`` is jit-friendly: the
-``SamplingConfig`` is a frozen (hashable) dataclass, so jitted callers
-close over it statically and the device never round-trips a decision to
-the host.
+Shared by the serving engine's decode blocks, the speculative-decoding
+verifier, and the examples — replaces the ad-hoc ``jnp.argmax`` calls.
+``sample`` is jit-friendly: the ``SamplingConfig`` is a frozen (hashable)
+dataclass, so jitted callers close over it statically and the device never
+round-trips a decision to the host.
+
+``probs`` exposes the *warped* next-token distribution (temperature /
+top-k / top-p applied, then softmax) as an explicit probability vector.
+Speculative sampling needs this: the accept/residual rule of
+Leviathan et al. operates on the target distribution p and the draft
+distribution q, and it only preserves the output law if both are the same
+warped distributions the plain sampler would draw from.
 """
 
 from __future__ import annotations
@@ -17,9 +24,48 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class SamplingConfig:
-    method: str = "greedy"  # greedy | temperature | top_k
+    method: str = "greedy"  # greedy | temperature | top_k | top_p
     temperature: float = 1.0
     top_k: int = 0  # only read when method == "top_k"
+    top_p: float = 1.0  # only read when method == "top_p" (nucleus)
+
+
+def _warped_logits(logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
+    """Temperature/top-k/top-p warping in logit space (-inf = masked)."""
+    lg = logits.astype(jnp.float32) / max(cfg.temperature, 1e-6)
+    if cfg.method == "top_k":
+        if cfg.top_k <= 0:
+            raise ValueError("top_k sampling needs top_k > 0")
+        kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    elif cfg.method == "top_p":
+        if not 0.0 < cfg.top_p <= 1.0:
+            raise ValueError("top_p sampling needs 0 < top_p <= 1")
+        # nucleus: keep the smallest prefix of the sorted distribution whose
+        # cumulative mass reaches top_p (the token that crosses the
+        # threshold is kept, so the set is never empty)
+        srt = jnp.sort(lg, axis=-1)[..., ::-1]
+        cum = jnp.cumsum(jax.nn.softmax(srt, axis=-1), axis=-1)
+        keep = cum - jax.nn.softmax(srt, axis=-1) < cfg.top_p
+        # threshold = smallest kept logit (keep is a sorted prefix mask)
+        thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+        lg = jnp.where(lg < thr, -jnp.inf, lg)
+    elif cfg.method not in ("temperature", "greedy"):
+        raise ValueError(f"unknown sampling method {cfg.method!r}")
+    return lg
+
+
+def probs(logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
+    """Warped next-token distribution over ``(..., vocab)`` logits (fp32).
+
+    greedy -> a delta at the argmax; otherwise softmax of the warped
+    logits.  This is exactly the law ``sample`` draws from, which is what
+    makes it usable as p (target) and q (draft) in speculative sampling.
+    """
+    if cfg.method == "greedy":
+        top = jnp.argmax(logits, axis=-1)
+        return jax.nn.one_hot(top, logits.shape[-1], dtype=jnp.float32)
+    return jax.nn.softmax(_warped_logits(logits, cfg), axis=-1)
 
 
 def sample(logits: jax.Array, key, cfg: SamplingConfig) -> jax.Array:
@@ -29,12 +75,5 @@ def sample(logits: jax.Array, key, cfg: SamplingConfig) -> jax.Array:
     """
     if cfg.method == "greedy":
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lg = logits.astype(jnp.float32) / max(cfg.temperature, 1e-6)
-    if cfg.method == "top_k":
-        if cfg.top_k <= 0:
-            raise ValueError("top_k sampling needs top_k > 0")
-        kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
-        lg = jnp.where(lg < kth, -jnp.inf, lg)
-    elif cfg.method != "temperature":
-        raise ValueError(f"unknown sampling method {cfg.method!r}")
+    lg = _warped_logits(logits, cfg)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,51 @@
+"""Speculative decoding for the state-pool serving engine.
+
+HLA's constant-size recurrent state makes it an unusually good target
+substrate for speculative decoding (DESIGN.md §10):
+
+* **verify is one prefill** — scoring k draft tokens is a single
+  chunk-parallel ``lm_score_block`` call on the existing stateful
+  kernels, not k serial decode steps;
+* **rollback is one small tensor** — rejecting a continuation restores a
+  per-slot state snapshot in O(state) (``StatePool.snapshot_slot`` /
+  ``restore_slot``), instead of truncating a context-length KV cache.
+
+Layering:
+
+* ``drafters`` — the ``Drafter`` interface + ``NGramDrafter``
+  (model-free prompt lookup) and ``HLADrafter`` (small HLA draft LM with
+  its own params and ``StatePool`` slots);
+* ``verify``   — chunk-parallel scoring, greedy and
+  distribution-preserving speculative-sampling acceptance, and the
+  masked-scan rollback replay;
+* ``SpecConfig`` — the ``Engine(spec=...)`` knob.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from .drafters import Drafter, HLADrafter, NGramDrafter, build_drafter
+from .verify import make_replay, make_spec_round, make_verify
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding configuration for ``serving.Engine``."""
+
+    k: int = 4  # draft tokens per round (the literature's gamma)
+    drafter: Union[str, Drafter] = "ngram"  # "ngram" | "lm" | instance
+    # "lm" drafter: any streaming-mixer entry of the configs registry
+    draft_arch: str = "hla-1b"
+    draft_reduced: bool = True
+    draft_seed: int = 0
+    # "ngram" drafter: trailing n-gram sizes tried, longest first
+    ngram_max: int = 3
+    ngram_min: int = 1
+
+
+__all__ = [
+    "Drafter", "HLADrafter", "NGramDrafter", "SpecConfig",
+    "build_drafter", "make_replay", "make_spec_round", "make_verify",
+]

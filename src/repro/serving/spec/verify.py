@@ -1,0 +1,257 @@
+"""Chunk-parallel exact verification + state rollback for speculative decode.
+
+Verification reuses the serving prefill machinery (``lm.lm_score_block`` ->
+``mode="prefill"`` -> one chunkwise call per layer: the fused Pallas
+prefill for hla2/ahla on TPU via ``shard_ops.call_sharded``, the jnp
+chunkwise path for hla3/hla3_paper/linattn/rwkv6) so scoring k draft
+tokens costs ONE wide forward instead of k serial decode steps.  The block
+fed to the target is
+
+    [t_last, d_1, ..., d_k]          (k+1 tokens, per slot)
+
+where ``t_last`` is the newest committed token.  ``logits[:, j]`` is then
+the target's next-token distribution after consuming the committed context
+plus ``d_1..d_j`` — the distribution plain decode would have sampled
+``d_{j+1}`` from.  By the paper's Section-4 identity the chunkwise pass
+reproduces the serial recurrence's activations, so these are the SAME
+logits non-speculative decode produces (exactly in exact arithmetic).
+
+Acceptance rules
+----------------
+* **greedy** — accept the longest prefix with ``argmax(logits[:, j]) ==
+  d_{j+1}``; the token at the first mismatch (or the bonus token after a
+  fully-accepted block) is ``argmax`` itself, so every committed token is
+  by construction the one plain greedy decode emits: speculative greedy is
+  token-for-token identical to plain greedy.
+* **speculative sampling** (Leviathan et al. / Chen et al.) — accept
+  ``d_j`` with probability ``min(1, p(d_j)/q(d_j))``; on the first
+  rejection sample from the residual ``norm(max(p - q, 0))``; after a full
+  acceptance sample the bonus from ``p``.  ``p`` and ``q`` are the WARPED
+  distributions from ``serving.sampling.probs`` (temperature / top-k /
+  top-p applied), which is required for the marginal law of every emitted
+  token to equal plain sampling's.  A deterministic drafter (n-gram) is
+  the ``q = one-hot`` special case: accept with probability ``p(d_j)``,
+  residual = ``p`` with the draft token zeroed, renormalized.
+
+State rollback
+--------------
+The prefill's returned states have consumed the WHOLE block — exactly the
+post-round state when all k drafts are accepted (the common case on
+drafter-friendly text), so full acceptance costs zero extra state work.
+On rejection the round restores the pre-verify states (O(state): the pool
+tree is immutable, the snapshot is a reference — ``StatePool.snapshot_slot``
+/ ``restore_slot`` expose the same primitive to host-level callers) and
+replays only each slot's accepted prefix with ``make_replay`` below: a
+fixed-length masked scan of the SAME fused decode steps plain decode runs,
+so the rolled-back state is bit-identical to non-speculative decode's.
+``make_spec_round`` fuses verify + acceptance + rollback (a ``lax.cond``
+arm that executes only on rejection rounds) + token/position advance into
+one jitted call.  This is the payoff of the paper's constant-size state:
+rollback never touches a KV cache, never grows with context, and costs
+O(k) small steps only on the (rare) rejection path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models import lm
+from ..sampling import SamplingConfig, probs
+
+
+def _leading_run(ok: jax.Array) -> jax.Array:
+    """Length of the leading all-True run per row.  ok: (B, k) bool."""
+    return jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+
+
+def select_slots(take, new_tree, old_tree):
+    """Per-slot select over stacked LM decode states.
+
+    Leaves are ``(layers, slots, ...)`` — slot axis 1 for every streaming
+    arch — so ``take`` ``(slots,)`` broadcasts as ``(1, slots, 1, ...)``.
+    """
+
+    def sel(a, b):
+        m = take.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, b, a)
+
+    return jax.tree.map(sel, old_tree, new_tree)
+
+
+def _pin(states, pool_shardings):
+    if pool_shardings is None:
+        return states
+    return jax.tree.map(
+        jax.lax.with_sharding_constraint, states, pool_shardings
+    )
+
+
+def make_verify(cfg, scfg: SamplingConfig, *, draft_probs: bool = False,
+                pool_shardings=None):
+    """Build the (jit-friendly) verify step for ``Engine``.
+
+    Returns ``verify(params, states, tok_block, positions, key[, q_probs])
+    -> (packed, new_states)`` where ``tok_block`` is ``(slots, k+1)`` =
+    ``[last committed, drafts]``, ``positions`` is ``(slots, 1)``, and
+    ``packed`` is ``(slots, k+2)`` int32: column 0 the number of accepted
+    drafts ``m``, columns 1..k+2 the committed tokens (only the first
+    ``m+1`` are meaningful) — one array so the engine does ONE host
+    transfer per round.  ``new_states`` have consumed the full block
+    (valid as-is only for fully-accepted slots; the engine rolls the rest
+    back).  ``q_probs`` (``(slots, k, vocab)``, the drafter's warped
+    distributions) is only taken when ``draft_probs=True``.
+    """
+
+    def _score(params, states, tok_block, positions):
+        kp1 = tok_block.shape[1]
+        pos = positions + jnp.arange(kp1, dtype=positions.dtype)[None, :]
+        logits, new_states = lm.lm_score_block(
+            params, tok_block, cfg, states=states, positions=pos
+        )
+        return logits, _pin(new_states, pool_shardings)
+
+    if scfg.method == "greedy":
+
+        def verify(params, states, tok_block, positions, key, *q):
+            # greedy acceptance never consults the draft law — accept and
+            # ignore a trailing q from probs-emitting drafters (e.g. a
+            # sampling HLADrafter paired with a greedy engine)
+            logits, new_states = _score(params, states, tok_block, positions)
+            preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # accepted drafts ARE the argmax predictions, so `preds` doubles
+            # as the committed-token array: position j <= m holds exactly
+            # the token plain greedy decode emits there.
+            n_acc = _leading_run(preds[:, :-1] == tok_block[:, 1:])
+            packed = jnp.concatenate([n_acc[:, None], preds], axis=1)
+            return packed, new_states
+
+        return verify
+
+    def verify(params, states, tok_block, positions, key, q_probs=None):
+        logits, new_states = _score(params, states, tok_block, positions)
+        drafts = tok_block[:, 1:]  # (slots, k)
+        p = probs(logits, scfg)  # (slots, k+1, vocab) warped target law
+        pk = p[:, :-1]
+        p_d = jnp.take_along_axis(pk, drafts[..., None], axis=-1)[..., 0]
+        if q_probs is None:  # deterministic drafter: q = one-hot(draft)
+            q_d = jnp.ones_like(p_d)
+            resid = pk * (1.0 - jax.nn.one_hot(drafts, pk.shape[-1]))
+        else:
+            q_d = jnp.take_along_axis(
+                q_probs, drafts[..., None], axis=-1
+            )[..., 0]
+            resid = jnp.maximum(pk - q_probs, 0.0)
+        k_acc, k_res = jax.random.split(key)
+        u = jax.random.uniform(k_acc, drafts.shape)
+        # u*q <= p  <=>  u <= p/q without the 0/0 hazard
+        n_acc = _leading_run(u * q_d <= p_d)
+        # residual law at the rejection index; a zero residual means p == q
+        # there (rejection probability 0) — any fallback works, use p
+        rs = jnp.sum(resid, axis=-1, keepdims=True)
+        resid = jnp.where(rs > 0.0, resid / jnp.maximum(rs, 1e-30), pk)
+        dist = jnp.concatenate([resid, p[:, -1:]], axis=1)
+        dist_m = jnp.take_along_axis(
+            dist, n_acc[:, None, None], axis=1
+        )[:, 0]
+        corr = jax.random.categorical(
+            k_res, jnp.log(dist_m + 1e-30), axis=-1
+        ).astype(jnp.int32)
+        jpos = jnp.arange(drafts.shape[1] + 1, dtype=jnp.int32)[None, :]
+        drafts_pad = jnp.concatenate([drafts, drafts[:, -1:]], axis=1)
+        committed = jnp.where(jpos == n_acc[:, None], corr[:, None],
+                              drafts_pad)
+        packed = jnp.concatenate([n_acc[:, None], committed], axis=1)
+        return packed, new_states
+
+    if draft_probs:
+        return verify
+    return lambda params, states, tok_block, positions, key: verify(
+        params, states, tok_block, positions, key, None
+    )
+
+
+def make_replay(cfg):
+    """Build the masked serial consume used for rollback AND for the
+    draft model's committed-context catch-up.
+
+    ``replay(params, states, toks, positions, n_consume) -> (states,
+    positions)`` runs a fixed-length masked scan of single-token decode
+    steps (the same fused ``mixer_step`` path plain decode uses —
+    bit-identical states) over ``toks`` ``(slots, W)``, committing only
+    each slot's first ``n_consume[slot]`` tokens' updates.  Fixed shapes
+    => one trace regardless of where rejection landed; per-slot masking
+    means one batched scan serves the whole pool (a single rolled-back
+    slot passes slot-dim-1 trees and ``n_consume=(1,)``).
+    """
+
+    def replay(params, states, toks, positions, n_consume):
+        def body(carry, j):
+            st, pos = carry
+            tok = jax.lax.dynamic_slice_in_dim(toks, j, 1, axis=1)
+            _, new_st, _ = lm.lm_apply(
+                params, tok, cfg, states=st, positions=pos, mode="decode"
+            )
+            take = j < n_consume  # (slots,)
+            st = select_slots(take, new_st, st)
+            pos = pos + take[:, None].astype(pos.dtype)
+            return (st, pos), None
+
+        (states, positions), _ = jax.lax.scan(
+            body, (states, positions), jnp.arange(toks.shape[1])
+        )
+        return states, positions
+
+    return replay
+
+
+def make_spec_round(cfg, scfg: SamplingConfig, *, draft_probs: bool = False,
+                    pool_shardings=None):
+    """Fuse draft-scoring, acceptance, rollback, and bookkeeping advance
+    into ONE jittable round — the engine's speculative hot path.
+
+    ``round(params, states, tokens, positions, active, drafts, key[, q])
+    -> (packed, new_states, new_tokens, new_positions)``
+
+    * ``packed`` — the verify output (``(slots, k+2)``: accepted count +
+      committed tokens), the round's single host transfer;
+    * ``new_states`` — the verify pass's own final states when EVERY
+      active slot accepted its whole block (they consumed exactly the
+      committed tokens: rollback is free), else — under a ``lax.cond``
+      that only executes on rejection rounds — the ``make_replay`` masked
+      scan from the pre-verify states, each slot advanced by exactly its
+      committed prefix;
+    * ``new_tokens`` / ``new_positions`` — per-slot newest committed token
+      and position advance, computed on device so the host never issues
+      per-slot updates (inactive slots frozen).
+    """
+    verify = make_verify(cfg, scfg, draft_probs=draft_probs,
+                         pool_shardings=None)
+    replay = make_replay(cfg)
+
+    def round_fn(params, states, tokens, positions, active, drafts, key,
+                 *q):
+        k = drafts.shape[1]
+        tok_block = jnp.concatenate([tokens, drafts], axis=1)
+        packed, ver_states = verify(
+            params, states, tok_block, positions, key, *q
+        )
+        n_acc = packed[:, 0]
+        n_comm = jnp.where(active, n_acc + 1, 0)
+        any_reject = jnp.any(active & (n_acc < k))
+        new_states = jax.lax.cond(
+            any_reject,
+            lambda _: replay(params, states, tok_block, positions,
+                             n_comm)[0],
+            lambda _: ver_states,
+            operand=None,
+        )
+        if pool_shardings is not None:
+            new_states = _pin(new_states, pool_shardings)
+        last = jnp.take_along_axis(packed, (n_acc + 1)[:, None], axis=1)
+        new_tokens = jnp.where(active[:, None], last.astype(tokens.dtype),
+                               tokens)
+        new_positions = positions + n_comm[:, None].astype(positions.dtype)
+        return packed, new_states, new_tokens, new_positions
+
+    return round_fn

@@ -13,6 +13,11 @@ axis and are left untouched by per-slot writes.
 Admission and eviction are **scatter-based**: one
 ``lax.dynamic_update_slice`` per leaf at the detected axis — no full-tree
 snapshot/restore, no host round-trips.
+
+``snapshot_slot``/``restore_slot`` expose per-slot O(state) checkpointing
+for speculative-decoding rollback (DESIGN.md §10): with the paper's
+constant-size streaming states the rollback unit is a few small tensors
+per layer, independent of context length — not a KV-cache truncation.
 """
 
 from __future__ import annotations
@@ -149,12 +154,39 @@ class StatePool:
         )
         self.states = jax.tree.unflatten(self._treedef, new_leaves)
 
-    def read_slot(self, slot: int):
-        """Gather ``slot``'s state as a single-slot tree (slot dims = 1)."""
-        leaves = self._read(self._flatten(self.states), jnp.int32(slot))
+    def read_slot(self, slot: int, states=None):
+        """Gather ``slot``'s state as a single-slot tree (slot dims = 1).
+
+        ``states`` reads from an alternate pooled tree with the pool's
+        structure (e.g. a snapshot taken before a speculative-verify
+        round) instead of the live pool.
+        """
+        src = self.states if states is None else states
+        leaves = self._read(self._flatten(src), jnp.int32(slot))
         return jax.tree.unflatten(self._treedef, leaves)
 
     def reset_slot(self, slot: int) -> None:
         """Zero a slot (eviction)."""
         zeros = jax.tree.map(jnp.zeros_like, self.empty_slot_state())
         self.write_slot(slot, zeros)
+
+    # -- snapshot / rollback (speculative decoding) -------------------------
+
+    def snapshot_slot(self, slot: int):
+        """O(state) snapshot of one slot's decode state.
+
+        This is what makes rejection in speculative decoding cheap for
+        constant-state architectures: the entire rollback unit is one
+        small state tuple per layer (KiB-scale), gathered with a
+        ``dynamic_slice`` per leaf — no KV-cache truncation, no tree
+        surgery, no growth with context length.
+        """
+        return self.read_slot(slot)
+
+    def restore_slot(self, slot: int, snapshot) -> None:
+        """Roll ``slot`` back to ``snapshot`` (from ``snapshot_slot`` or a
+        replayed correction) in O(state): one scatter write per leaf.
+        Other slots' states are untouched, so a rejected continuation
+        never perturbs concurrently-decoding requests.
+        """
+        self.write_slot(slot, snapshot)
