@@ -163,6 +163,41 @@ def render_spec():
     return "\n".join(out)
 
 
+def render_ops():
+    """§Operator table from results/ops.json (benchmarks.run bench_ops):
+    train-fwd and decode tok/s for every registered SequenceOp on the
+    same reduced backbone — the registry-dispatch perf trajectory."""
+    path = os.path.join(RESULTS, "ops.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    sh = r["shape"]
+    out = [
+        "\n### §Operator — per-SequenceOp throughput "
+        f"(backend={r['backend']}, {sh['arch']}, B={sh['B']} n={sh['n']} "
+        f"decode_steps={sh['decode_steps']})\n",
+        "| op | train-fwd tok/s | decode tok/s | streaming | fused "
+        "kernels | spec-decodable |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, e in sorted(r["entries"].items()):
+        flag = lambda b: "yes" if b else "no"  # noqa: E731
+        out.append(
+            f"| {name} | {e['train_fwd_tok_per_s']} | "
+            f"{e['decode_tok_per_s']} | {flag(e['streaming'])} | "
+            f"{flag(e['has_fused_kernels'])} | "
+            f"{flag(e['spec_decodable'])} |"
+        )
+    out.append(
+        "\n(all ops run the identical backbone through the SequenceOp "
+        "registry — differences are the operators themselves plus any "
+        "dispatch overhead; interpret-mode numbers on CPU are not "
+        "indicative — compare on TPU.)"
+    )
+    return "\n".join(out)
+
+
 def render_distributed():
     """§Distributed table from results/distributed.json (benchmarks.run
     bench_distributed): per-device train tok/s, 1 -> 8 host devices."""
@@ -254,6 +289,9 @@ def main():
     sp = render_spec()
     if sp:
         text = text + "\n" + sp
+    op = render_ops()
+    if op:
+        text = text + "\n" + op
     ds = render_distributed()
     if ds:
         text = text + "\n" + ds

@@ -301,6 +301,91 @@ def bench_serving(rows):
         }, f, indent=1)
 
 
+def bench_ops(rows):
+    """Per-operator train-forward and decode throughput over EVERY
+    registered ``SequenceOp`` (DESIGN.md §11).
+
+    Same reduced backbone for all ops (only the mixing sublayer differs),
+    so the matrix shows the relative cost of each operator AND makes any
+    registry-dispatch overhead visible in the perf trajectory: train-fwd
+    tok/s is one jitted ``lm_apply`` over (B, n), decode tok/s is a
+    jitted ``lax.scan`` of fused single-token steps (the serving block
+    path without sampling).  Dumped to ``results/ops.json`` for
+    ``benchmarks.report`` (§Operator table).
+    """
+    import functools
+
+    from repro.configs import get_config
+    from repro.models import lm, seq_op
+    from repro.models.config import MambaConfig
+    from repro.models.param import init_params
+
+    base = get_config("hla-1b", reduced=True)
+    B, n, steps = 4, 256, 16
+    entries = {}
+    for name in seq_op.registered_op_names():
+        cfg = base.replace(mixer=("softmax" if name == "attn" else name))
+        if name == "mamba":
+            cfg = cfg.replace(mamba=MambaConfig(d_state=8))
+        params = init_params(lm.lm_specs(cfg), jax.random.key(0))
+        rng = np.random.RandomState(7)
+        toks = jnp.asarray(rng.randint(1, cfg.vocab, (B, n)), jnp.int32)
+
+        fwd = jax.jit(functools.partial(
+            lambda p, t, cfg: lm.lm_apply(p, t, cfg)[0], cfg=cfg
+        ))
+        us_fwd = _timeit(fwd, params, toks, iters=3, warmup=1)
+
+        _, states = jax.jit(functools.partial(
+            lambda p, t, cfg: lm.lm_prefill(p, t, cfg), cfg=cfg
+        ))(params, toks)
+
+        def decode_block(p, st, tok, pos, cfg=cfg):
+            def body(carry, _):
+                st, tok, pos = carry
+                lg, st, _ = lm.lm_apply(
+                    p, tok, cfg, states=st, positions=pos, mode="decode"
+                )
+                nxt = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+                return (st, nxt, pos + 1), ()
+            (st, tok, _), _ = jax.lax.scan(
+                body, (st, tok, pos), length=steps
+            )
+            return st, tok
+
+        tok0 = toks[:, -1:]
+        pos0 = jnp.full((B, 1), n, jnp.int32)
+        us_dec = _timeit(
+            jax.jit(decode_block), params, states, tok0, pos0,
+            iters=3, warmup=1,
+        )
+
+        op = seq_op.get_op(name)
+        train_tok_s = B * n / (us_fwd / 1e6)
+        decode_tok_s = B * steps / (us_dec / 1e6)
+        entries[name] = {
+            "train_fwd_tok_per_s": round(train_tok_s, 1),
+            "decode_tok_per_s": round(decode_tok_s, 1),
+            "streaming": op.streaming,
+            "has_fused_kernels": op.has_fused_kernels,
+            "spec_decodable": op.spec_decodable,
+        }
+        rows.append((
+            f"ops/{name}", us_fwd,
+            f"train_fwd_tok_per_s={train_tok_s:.0f} "
+            f"decode_tok_per_s={decode_tok_s:.0f}",
+        ))
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "ops.json"), "w") as f:
+        json.dump({
+            "backend": jax.default_backend(),
+            "shape": {"B": B, "n": n, "decode_steps": steps,
+                      "arch": "hla-1b-reduced"},
+            "entries": entries,
+        }, f, indent=1)
+
+
 def bench_spec(rows):
     """Speculative decoding vs plain block decode (acceptance + tok/s).
 
@@ -523,6 +608,7 @@ BENCHES = {
     "bench_train_step": bench_train_step,
     "bench_decode_throughput": bench_decode_throughput,
     "bench_serving": bench_serving,
+    "bench_ops": bench_ops,
     "bench_spec": bench_spec,
     "bench_distributed": bench_distributed,
 }

@@ -141,9 +141,9 @@ def parse_hlo(text: str):
                 continue
             km = m
             break
-        kind = km.group(1) if km else "unknown"
+        op_kind = km.group(1) if km else "unknown"
         out_text = rhs[: km.start()] if km else rhs
-        # operands: inside the first (...) after the kind
+        # operands: inside the first (...) after the op kind
         operands = []
         if km:
             depth = 0
@@ -161,14 +161,14 @@ def parse_hlo(text: str):
                     buf += ch
             operands = re.findall(r"%[\w.\-]+", buf)
         cur.defs[name] = out_text
-        if kind == "parameter":
+        if op_kind == "parameter":
             pm = re.search(r"parameter\((\d+)\)", rhs)
             if pm:
                 idx = int(pm.group(1))
                 while len(cur.param_order) <= idx:
                     cur.param_order.append(None)
                 cur.param_order[idx] = name
-        cur.ops.append(Op(name, kind, _shapes_bytes(out_text), out_text,
+        cur.ops.append(Op(name, op_kind, _shapes_bytes(out_text), out_text,
                           operands, rhs))
     return comps, entry_name
 

@@ -557,11 +557,11 @@ def hla3_exact_naive(
 
 
 def hla3(
-    q, k, v, gamma=None, *, impl: str = "chunkwise", variant: str = "exact",
+    q, k, v, gamma=None, *, impl: str = "chunkwise", form: str = "exact",
     chunk: int = 64, normalize: bool = False, eps: float = 1e-6, state=None,
 ):
-    """Front-end.  variant: 'exact' (corrected) or 'paper' (Alg 3/4)."""
-    if variant == "exact":
+    """Front-end.  form: 'exact' (corrected) or 'paper' (Alg 3/4)."""
+    if form == "exact":
         if impl == "chunkwise":
             return hla3_exact_chunkwise(
                 q, k, v, gamma, chunk=chunk, normalize=normalize, eps=eps,
@@ -592,4 +592,4 @@ def hla3(
             )
         if impl == "naive":
             return hla3_paper_naive(q, k, v, normalize=normalize, eps=eps), None
-    raise ValueError((impl, variant))
+    raise ValueError((impl, form))

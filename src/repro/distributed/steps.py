@@ -148,8 +148,9 @@ def make_prefill_step(cfg):
             total = n + (cfg.vis_tokens or 0)  # VLM prepends patch tokens
             states = (
                 lm.lm_init_states(cfg, B, total)
-                if cfg.mixer == "softmax" or cfg.group_size
-                else None  # streaming archs build state from scratch
+                if lm.needs_prealloc_states(cfg)  # SequenceOp capability:
+                #   KV-cache/hybrid ops prefill into preallocated state
+                else None  # streaming ops build state from scratch
             )
             logits, states, _ = lm.lm_apply(
                 params, batch["tokens"], cfg, states=states, mode="prefill",
@@ -215,8 +216,9 @@ def input_specs(cfg, shape_cfg, mesh):
 
 def state_axes(cfg):
     """Logical axes for every decode-state leaf — delegated to the model
-    modules (``lm.lm_state_axes`` / ``whisper.whisper_state_axes``), the
-    single sharding source of truth.  Replaces the old shape heuristic
+    modules (``lm.lm_state_axes`` / ``whisper.whisper_state_axes``), which
+    read each operator's ``SequenceOp.state_axes`` record: the single
+    sharding source of truth.  Replaces the old shape heuristic
     (first dim divisible by the model axis), which mis-sharded any state
     whose feature dim happened to divide the axis size."""
     if cfg.enc_layers:

@@ -48,6 +48,11 @@ from .mesh import make_mesh, mesh_summary  # noqa: E402
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="hla-1b")
+    ap.add_argument("--mixer", default=None,
+                    help="override the arch's sequence op with any "
+                         "registered SequenceOp (e.g. gla, ahla, linattn; "
+                         "DESIGN.md §11) — the engine gates on the op's "
+                         "streaming capability flag")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
@@ -70,7 +75,7 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
+    cfg = get_config(args.arch, reduced=args.reduced, mixer=args.mixer)
     mesh = make_mesh()
     print(f"[serve] {cfg.name} on {mesh_summary(mesh)}")
     rng = np.random.RandomState(args.seed)

@@ -187,6 +187,47 @@ def attention_apply(
     return dense_apply(p["wo"], out), new_cache
 
 
+# --------------------------------------------------------------------------
+# SequenceOp registration: softmax attention as "attn"
+# --------------------------------------------------------------------------
+
+
+def _attn_forward(p, x, cfg, *, state=None, want_state=False, positions=None,
+                  use_rope=True):
+    """Train (state=None) or prefill/decode (state=KVCache, filled in
+    place at ``state.length``).  ``want_state`` is implied by ``state``."""
+    return attention_apply(
+        p, x, cfg, positions=positions, cache=state, use_rope=use_rope
+    )
+
+
+def _attn_step(p, x_t, state, cfg, *, positions=None):
+    return attention_apply(p, x_t, cfg, positions=positions, cache=state)
+
+
+def _attn_init_state(cfg, B, *, max_len=0, dtype=None):
+    return init_kv_cache(B, cfg.n_kv_heads, max_len, cfg.head_dim)
+
+
+from . import seq_op as _seq_op  # noqa: E402  (import cycle: none — seq_op
+#   imports this module lazily, after its own module body has run)
+
+_seq_op.register_op(_seq_op.SequenceOp(
+    name="attn",
+    specs=attention_specs,
+    forward=_attn_forward,
+    step=_attn_step,
+    init_state=_attn_init_state,
+    state_axes=lambda cfg: kv_cache_axes(),
+    streaming=False,  # KV cache grows with context; its pooled scalar
+    #   ``length`` is shared across slots, so the serving engine's
+    #   per-slot continuous batching cannot admit it (engine.py)
+    spec_decodable=False,
+    needs_positions=True,
+    prealloc_state=True,  # prefill fills a preallocated cache
+))
+
+
 def cross_kv_specs(cfg):
     d, Hk, dh = cfg.d_model, cfg.n_kv_heads, cfg.head_dim
     return {

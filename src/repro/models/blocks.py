@@ -162,32 +162,32 @@ def sinusoidal_pos(n: int, d: int, dtype=jnp.float32):
 # ------------------------------ MLPs ----------------------------------------
 
 
-def mlp_specs(d: int, d_ff: int, kind: str):
-    if kind == "swiglu":
+def mlp_specs(d: int, d_ff: int, act: str):
+    if act == "swiglu":
         return {
             "wi_gate": dense_specs(d, d_ff),
             "wi_up": dense_specs(d, d_ff),
             "wo": dense_specs(d_ff, d, axes=("ff", "embed")),
         }
-    if kind in ("squared_relu", "gelu", "relu"):
+    if act in ("squared_relu", "gelu", "relu"):
         return {
             "wi": dense_specs(d, d_ff),
             "wo": dense_specs(d_ff, d, axes=("ff", "embed")),
         }
-    raise ValueError(kind)
+    raise ValueError(act)
 
 
-def mlp_apply(p, x, kind: str):
+def mlp_apply(p, x, act: str):
     from ..distributed.sharding import constrain
 
-    if kind == "swiglu":
+    if act == "swiglu":
         g = constrain(dense_apply(p["wi_gate"], x), ("batch", None, "ff"))
         u = constrain(dense_apply(p["wi_up"], x), ("batch", None, "ff"))
         return dense_apply(p["wo"], jax.nn.silu(g) * u)
     h = constrain(dense_apply(p["wi"], x), ("batch", None, "ff"))
-    if kind == "squared_relu":
+    if act == "squared_relu":
         h = jnp.square(jax.nn.relu(h))
-    elif kind == "gelu":
+    elif act == "gelu":
         h = jax.nn.gelu(h)
     else:
         h = jax.nn.relu(h)

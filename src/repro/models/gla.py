@@ -1,0 +1,195 @@
+"""Gated Linear Attention (GLA): per-token, per-channel gated decay.
+
+The registry's worked example (DESIGN.md §11): a NEW causal streaming
+mixer added purely through the public ``seq_op.register_op`` entry point
+— it trains, chunk-parallel prefills, continuously-batch decodes, and
+shards with ZERO edits to ``models/lm.py``, ``serving/engine.py`` or
+``distributed/steps.py``.
+
+The operator (Yang et al., "Gated Linear Attention Transformers with
+Hardware-Efficient Training"; PAPERS.md) generalizes the HLA family's
+scalar per-head decay to a data-dependent per-channel gate:
+
+    S_t = diag(a_t) S_{t-1} + k_t v_t^T          a_t in (0, 1)^{d_k}
+    o_t = S_t^T q_t
+
+with ``a_t = sigmoid(low_rank(x_t))^(1/tau)`` (tau keeps the gate near 1
+at init so early training does not forget).  Chunk-parallel form, exactly
+the two-level skeleton of the HLA scans (intra-chunk masked matmul in
+cumulative log-gate space, sequential carry across chunks):
+
+    o_t = (q_t ⊙ e^{c_t}) S_0
+        + sum_{j<=t} <q_t ⊙ e^{c_t - c_j}, k_j> v_j,   c_t = sum_{i<=t} log a_i
+    S_w = e^{c_w} ⊙_rows S_0 + sum_j (k_j ⊙ e^{c_w - c_j}) v_j^T
+
+The ``exp(±c)`` factorization is kept in fp32 range by clamping the
+per-token log-gate at ``LOG_A_MIN`` and fixing the chunk width at
+``GLA_CHUNK`` (|c| <= 32 * 2.5 = 80 < log(fp32 max) ~ 88 — same bound as
+the RWKV-6 chunk path).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .blocks import dense_apply, dense_specs
+from .param import Axes, Spec
+from . import seq_op
+
+LOG_A_MIN = -2.5  # per-token floor: a_t >= e^-2.5 ~ 0.08 already "forget"
+GLA_CHUNK = 32  # fixed: bounds |cumsum(log a)| for the exp factorization
+GATE_TAU = 16.0  # gate temperature (GLA paper): a = sigmoid(z)^(1/tau)
+
+
+class GLAState(NamedTuple):
+    S: jax.Array  # (B, H, dk, dv)
+
+
+def gla_init_state(batch_shape, d, dv, dtype=jnp.float32) -> GLAState:
+    return GLAState(S=jnp.zeros(batch_shape + (d, dv), dtype))
+
+
+def gla_specs(cfg):
+    d, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    lora = max(16, d // 16)
+    return {
+        "wq": dense_specs(d, H * dh, axes=("embed", "q_heads_flat")),
+        "wk": dense_specs(d, H * dh, axes=("embed", "q_heads_flat")),
+        "wv": dense_specs(d, H * dh, axes=("embed", "q_heads_flat")),
+        # low-rank data-dependent gate; a0 ~ 4 => a ~ sigmoid(4)^(1/16)
+        # ~ 0.9989 per token at init (slow forgetting)
+        "wa_a": dense_specs(d, lora, axes=("embed", None)),
+        "wa_b": dense_specs(lora, H * dh, axes=(None, "q_heads_flat")),
+        "a0": Spec((H * dh,), ("q_heads_flat",), init="constant", const=4.0),
+        "out_scale": Spec((H, dh), ("q_heads", "head_dim"), init="ones"),
+        "wo": dense_specs(H * dh, d, axes=("q_heads_flat", "embed")),
+    }
+
+
+def _project(p, x, cfg):
+    """(q, k, v, log_a), each (B, H, n, dh) fp32, row layout like HLA."""
+    B, n, _ = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+
+    def heads(name):
+        return dense_apply(p[name], x).reshape(B, n, H, dh).swapaxes(1, 2)
+
+    spec = ("batch", "q_heads", None, None)
+    q = constrain(heads("wq").astype(jnp.float32) * (dh**-0.5), spec)
+    k = constrain(heads("wk").astype(jnp.float32), spec)
+    v = constrain(heads("wv").astype(jnp.float32), spec)
+    z = dense_apply(p["wa_b"], dense_apply(p["wa_a"], x)).astype(jnp.float32)
+    z = z + p["a0"].astype(jnp.float32)[None, None]
+    # log a = log sigmoid(z) / tau, clamped into the chunk-stable range
+    log_a = jnp.clip(
+        jax.nn.log_sigmoid(z) / GATE_TAU, LOG_A_MIN, -1e-6
+    ).reshape(B, n, H, dh)
+    return q, k, v, constrain(log_a.swapaxes(1, 2), spec)
+
+
+def gla_chunkwise(q, k, v, log_a, *, chunk: int = GLA_CHUNK,
+                  state: Optional[GLAState] = None):
+    """Chunk-parallel gated linear attention.  Returns (o, final_state).
+
+    Zero-padding the tail chunk is exact: padded log-gates are 0 (a = 1,
+    no decay) and padded keys are 0 (no state contribution).
+    """
+    B, H, n, dk = q.shape
+    dv = v.shape[-1]
+    w = min(chunk, n)
+    pad = (w - n % w) % w
+    if pad:
+        pads = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(t, pads) for t in (q, k, v))
+        log_a = jnp.pad(log_a, pads)
+    npad = n + pad
+    nc = npad // w
+
+    def chunks(t):
+        return jnp.moveaxis(t.reshape(B, H, nc, w, t.shape[-1]), 2, 0)
+
+    qc, kc, vc, lac = map(chunks, (q, k, v, log_a))
+    S0 = (
+        state.S.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, H, dk, dv), jnp.float32)
+    )
+    tril = jnp.tril(jnp.ones((w, w), jnp.float32))  # j <= t (diag incl.)
+
+    def body(S, inp):
+        q_, k_, v_, la_ = inp  # (B, H, w, .)
+        c = jnp.cumsum(la_, axis=2)  # inclusive cumulative log-gates
+        qs = q_ * jnp.exp(c)
+        scores = jnp.einsum("bhtd,bhjd->bhtj", qs, k_ * jnp.exp(-c))
+        y = jnp.einsum("bhtj,bhje->bhte", scores * tril, v_)
+        y = y + jnp.einsum("bhtd,bhde->bhte", qs, S)
+        c_end = c[..., -1:, :]  # (B, H, 1, dk)
+        Snew = jnp.exp(c_end[..., 0, :])[..., None] * S + jnp.einsum(
+            "bhjd,bhje->bhde", k_ * jnp.exp(c_end - c), v_
+        )
+        return Snew, y
+
+    Sf, ys = jax.lax.scan(body, S0, (qc, kc, vc, lac))
+    o = jnp.moveaxis(ys, 0, 2).reshape(B, H, npad, dv)[:, :, :n]
+    return o, GLAState(S=Sf)
+
+
+def gla_step(state: GLAState, q_t, k_t, v_t, log_a_t):
+    """One-token recurrence.  q_t/k_t/v_t/log_a_t: (B, H, dh)."""
+    S = state.S.astype(jnp.float32)
+    S = jnp.exp(log_a_t.astype(jnp.float32))[..., None] * S + (
+        k_t.astype(jnp.float32)[..., :, None]
+        * v_t.astype(jnp.float32)[..., None, :]
+    )
+    o = jnp.einsum("bhd,bhde->bhe", q_t.astype(jnp.float32), S)
+    return GLAState(S=S.astype(state.S.dtype)), o
+
+
+def _out_norm(p, o, cfg, eps=1e-6):
+    """Per-head RMS norm + learned scale (as the HLA mixer sublayer)."""
+    o32 = o.astype(jnp.float32)
+    var = jnp.mean(o32 * o32, axis=-1, keepdims=True)
+    o32 = o32 * jax.lax.rsqrt(var + eps)
+    return o32 * p["out_scale"][None, :, None, :]
+
+
+def _gla_forward(p, x, cfg, *, state=None, want_state=False, positions=None):
+    B, n, _ = x.shape
+    q, k, v, log_a = _project(p, x, cfg)
+    o, st = gla_chunkwise(q, k, v, log_a, state=state)
+    o = _out_norm(p, o, cfg).astype(x.dtype)
+    o = o.swapaxes(1, 2).reshape(B, n, cfg.n_heads * cfg.head_dim)
+    o = constrain(o, ("batch", None, "q_heads_flat"))
+    return dense_apply(p["wo"], o), st
+
+
+def _gla_step(p, x_t, state, cfg, *, positions=None):
+    B = x_t.shape[0]
+    q, k, v, log_a = _project(p, x_t, cfg)  # (B, H, 1, dh)
+    state, o = gla_step(
+        state, q[..., 0, :], k[..., 0, :], v[..., 0, :], log_a[..., 0, :]
+    )
+    o = _out_norm(p, o[..., None, :], cfg).astype(x_t.dtype)
+    o = o.swapaxes(1, 2).reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return dense_apply(p["wo"], o), state
+
+
+seq_op.register_op(seq_op.SequenceOp(
+    name="gla",
+    specs=gla_specs,
+    forward=_gla_forward,
+    step=_gla_step,
+    init_state=lambda cfg, B, *, max_len=0, dtype=None: gla_init_state(
+        (B, cfg.n_heads), cfg.head_dim, cfg.head_dim,
+        jnp.float32 if dtype is None else dtype,
+    ),
+    state_axes=lambda cfg: GLAState(
+        S=Axes(("batch", "q_heads", None, None))
+    ),
+    streaming=True,
+    spec_decodable=True,
+))

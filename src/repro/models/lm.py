@@ -6,25 +6,28 @@ compiles, pipeline-friendly).  Hybrid (jamba) stacks scan over *groups* of
 ``group_size`` layers (1 attention/HLA + rest mamba, MoE on alternate
 positions), unrolled inside the scan body.
 
-Decode states are stacked pytrees matching the scan structure:
-softmax -> KVCache, hla*/linattn -> core state tuples, mamba -> MambaState,
-rwkv6 -> RWKVState.
+Every sequence-mixing sublayer is a registered ``seq_op.SequenceOp``
+(DESIGN.md §11): this module resolves ``cfg`` to op records ONCE and then
+programs purely against the record interface — specs / forward / step /
+init_state / state_axes plus capability flags.  There is no per-kind
+dispatch here; registering a new operator (see ``models/gla.py``) makes it
+train, prefill and decode through this file with zero edits.
+
+Decode states are stacked pytrees matching the scan structure — each
+leaf's layout is whatever the op's ``init_state`` returns (KVCache for
+attn, core state tuples for the HLA family, MambaState, RWKVState, ...).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import attention as attn_mod
-from . import mixer as mixer_mod
 from . import moe as moe_mod
-from . import rwkv6 as rwkv_mod
-from . import ssm as ssm_mod
+from . import seq_op
 from .blocks import (
     embed_apply,
     embed_specs,
@@ -39,30 +42,15 @@ from ..distributed.sharding import constrain
 
 
 # --------------------------------------------------------------------------
-# per-layer specs / apply
+# per-layer specs / apply (SequenceOp-generic)
 # --------------------------------------------------------------------------
 
 
-def _mixer_kind(cfg) -> str:
-    if cfg.mixer == "softmax":
-        return "attn"
-    if cfg.mixer == "rwkv6":
-        return "rwkv6"
-    return "mixer"  # hla2 | ahla | hla3 | hla3_paper | linattn
-
-
-def layer_specs(cfg, kind: str, use_moe: bool):
-    if kind == "rwkv6":
-        return rwkv_mod.rwkv6_specs(cfg)  # self-contained (owns norms)
+def layer_specs(cfg, op: seq_op.SequenceOp, use_moe: bool):
+    if op.self_contained:  # e.g. rwkv6: owns norms + channel mix
+        return op.specs(cfg)
     s = {"ln1": rmsnorm_specs(cfg.d_model), "ln2": rmsnorm_specs(cfg.d_model)}
-    if kind == "attn":
-        s["attn"] = attn_mod.attention_specs(cfg)
-    elif kind == "mixer":
-        s["mixer"] = mixer_mod.mixer_specs(cfg)
-    elif kind == "mamba":
-        s["mamba"] = ssm_mod.mamba_specs(cfg)
-    else:
-        raise ValueError(kind)
+    s[op.param_key] = op.specs(cfg)
     if use_moe:
         s["moe"] = moe_mod.moe_specs(cfg)
     else:
@@ -71,45 +59,30 @@ def layer_specs(cfg, kind: str, use_moe: bool):
 
 
 def layer_apply(
-    p, x, cfg, kind: str, use_moe: bool, *,
+    p, x, cfg, op: seq_op.SequenceOp, use_moe: bool, *,
     positions=None, state=None, mode: str = "train",
 ):
     """Returns (x, new_state, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
-    if kind == "rwkv6":
-        x, new_state = rwkv_mod.rwkv6_layer_apply(p, x, cfg, state)
-        return x, new_state, aux
+    if op.self_contained:
+        x, new_state = op.forward(p, x, cfg, state=state)
+        return x, (None if mode == "train" else new_state), aux
 
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
-    if kind == "attn":
-        if mode == "decode":
-            y, new_state = attn_mod.attention_apply(
-                p["attn"], h, cfg, positions=positions, cache=state
-            )
-        elif mode == "prefill":
-            # fill the cache while computing outputs
-            y, new_state = attn_mod.attention_apply(
-                p["attn"], h, cfg, positions=positions, cache=state
-            )
-        else:
-            y, new_state = attn_mod.attention_apply(
-                p["attn"], h, cfg, positions=positions
-            )
-    elif kind == "mixer":
-        if mode == "decode":
-            y, new_state = mixer_mod.mixer_step(p["mixer"], h, state, cfg)
-        else:
-            y, st = mixer_mod.mixer_apply(
-                p["mixer"], h, cfg, want_state=(mode == "prefill"),
-                state=state if mode == "prefill" else None,
-            )
-            new_state = st if mode == "prefill" else None
-    elif kind == "mamba":
-        y, new_state = ssm_mod.mamba_apply(p["mamba"], h, cfg, state=state)
-        if mode == "train":
-            new_state = None
+    sub = p[op.param_key]
+    if mode == "decode" and op.streaming:
+        y, new_state = op.step(sub, h, state, cfg, positions=positions)
     else:
-        raise ValueError(kind)
+        # train: state is None, want_state False -> pure training path;
+        # prefill: one chunkwise/cache-filling call returning the decode
+        # state; decode for non-streaming ops (attn) is a cache-append
+        # forward over the single new token.
+        y, new_state = op.forward(
+            sub, h, cfg, state=state,
+            want_state=(mode != "train"), positions=positions,
+        )
+    if mode == "train":
+        new_state = None
     x = x + y
 
     h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
@@ -121,32 +94,14 @@ def layer_apply(
     return x, new_state, aux
 
 
-def layer_init_state(cfg, kind: str, B: int, max_len: int):
-    if kind == "attn":
-        return attn_mod.init_kv_cache(
-            B, cfg.n_kv_heads, max_len, cfg.head_dim
-        )
-    if kind == "mixer":
-        return mixer_mod.mixer_init_state(cfg, B)
-    if kind == "mamba":
-        return ssm_mod.mamba_init_state(cfg, B)
-    if kind == "rwkv6":
-        return rwkv_mod.rwkv6_init_state(cfg, B)
-    raise ValueError(kind)
+def layer_init_state(cfg, op: seq_op.SequenceOp, B: int, max_len: int):
+    return op.init_state(cfg, B, max_len=max_len)
 
 
-def layer_state_axes(cfg, kind: str):
-    """Logical axes matching ``layer_init_state``'s tree (per-module
-    source of truth; ``lm_state_axes`` adds the "layers" stacking dim)."""
-    if kind == "attn":
-        return attn_mod.kv_cache_axes()
-    if kind == "mixer":
-        return mixer_mod.mixer_state_axes(cfg)
-    if kind == "mamba":
-        return ssm_mod.mamba_state_axes()
-    if kind == "rwkv6":
-        return rwkv_mod.rwkv6_state_axes()
-    raise ValueError(kind)
+def layer_state_axes(cfg, op: seq_op.SequenceOp):
+    """Logical axes matching ``layer_init_state``'s tree (per-op source of
+    truth; ``lm_state_axes`` adds the "layers" stacking dim)."""
+    return op.state_axes(cfg)
 
 
 # --------------------------------------------------------------------------
@@ -165,15 +120,25 @@ def _stack_specs(specs, L: int):
 
 
 def _group_layout(cfg):
-    """Hybrid (jamba) group layout: list of (kind, use_moe) per position."""
+    """Hybrid (jamba) group layout: list of (op, use_moe) per position —
+    the configured mixer op at ``attn_index``, mamba elsewhere."""
+    mix_op = seq_op.op_for(cfg)
+    mamba_op = seq_op.get_op("mamba")
     out = []
     for i in range(cfg.group_size):
-        kind = "attn" if i == cfg.attn_index else "mamba"
-        if cfg.mixer in ("hla2", "ahla", "hla3", "hla3_paper", "linattn") and i == cfg.attn_index:
-            kind = "mixer"
+        op = mix_op if i == cfg.attn_index else mamba_op
         use_moe = cfg.moe is not None and (i % cfg.moe.every == cfg.moe.every - 1)
-        out.append((kind, use_moe))
+        out.append((op, use_moe))
     return out
+
+
+def needs_prealloc_states(cfg) -> bool:
+    """True when prefill must write into preallocated states (KV caches /
+    hybrid stacks) rather than building streaming state from scratch —
+    derived from the ops' ``prealloc_state`` capability flag."""
+    if cfg.group_size:
+        return any(op.prealloc_state for op, _ in _group_layout(cfg))
+    return seq_op.op_for(cfg).prealloc_state
 
 
 def lm_specs(cfg):
@@ -181,15 +146,15 @@ def lm_specs(cfg):
     if cfg.group_size:
         n_groups = cfg.n_layers // cfg.group_size
         group = {
-            f"pos{i}": layer_specs(cfg, kind, use_moe)
-            for i, (kind, use_moe) in enumerate(_group_layout(cfg))
+            f"pos{i}": layer_specs(cfg, op, use_moe)
+            for i, (op, use_moe) in enumerate(_group_layout(cfg))
         }
         specs["groups"] = _stack_specs(group, n_groups)
     else:
-        kind = _mixer_kind(cfg)
+        op = seq_op.op_for(cfg)
         use_moe = cfg.moe is not None
         specs["layers"] = _stack_specs(
-            layer_specs(cfg, kind, use_moe), cfg.n_layers
+            layer_specs(cfg, op, use_moe), cfg.n_layers
         )
     specs["final_norm"] = rmsnorm_specs(cfg.d_model)
     if not cfg.tie_embeddings:
@@ -227,14 +192,13 @@ def lm_init_states(cfg, B: int, max_len: int):
     if cfg.group_size:
         n_groups = cfg.n_layers // cfg.group_size
         one = {
-            f"pos{i}": layer_init_state(cfg, kind, B, max_len)
-            for i, (kind, _) in enumerate(_group_layout(cfg))
+            f"pos{i}": layer_init_state(cfg, op, B, max_len)
+            for i, (op, _) in enumerate(_group_layout(cfg))
         }
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one
         )
-    kind = _mixer_kind(cfg)
-    one = layer_init_state(cfg, kind, B, max_len)
+    one = layer_init_state(cfg, seq_op.op_for(cfg), B, max_len)
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
     )
@@ -249,11 +213,11 @@ def lm_state_axes(cfg):
 
     if cfg.group_size:
         one = {
-            f"pos{i}": layer_state_axes(cfg, kind)
-            for i, (kind, _) in enumerate(_group_layout(cfg))
+            f"pos{i}": layer_state_axes(cfg, op)
+            for i, (op, _) in enumerate(_group_layout(cfg))
         }
     else:
-        one = layer_state_axes(cfg, _mixer_kind(cfg))
+        one = layer_state_axes(cfg, seq_op.op_for(cfg))
     return jax.tree.map(
         lambda ax: Axes(("layers",) + tuple(ax)), one,
         is_leaf=lambda x: isinstance(x, Axes),
@@ -282,13 +246,9 @@ def lm_apply(
         positions = jnp.arange(n)[None, :]
 
     collect_state = mode in ("prefill", "decode")
-    if (
-        mode == "prefill"
-        and states is None
-        and (cfg.mixer == "softmax" or cfg.group_size)
-    ):
-        # softmax/hybrid archs need KV caches allocated to be filled
-        # (+ margin for subsequent decode); streaming archs build state
+    if mode == "prefill" and states is None and needs_prealloc_states(cfg):
+        # KV-cache/hybrid archs need states allocated to be filled
+        # (+ margin for subsequent decode); streaming ops build state
         # from scratch.
         states = lm_init_states(cfg, B, n + 64)
 
@@ -301,10 +261,10 @@ def lm_apply(
             gp = inp["params"]
             gst = inp.get("state")
             new_states = {}
-            for i, (kind, use_moe) in enumerate(layout):
+            for i, (op, use_moe) in enumerate(layout):
                 st_i = gst[f"pos{i}"] if gst is not None else None
                 x, new_st, a = layer_apply(
-                    gp[f"pos{i}"], x, cfg, kind, use_moe,
+                    gp[f"pos{i}"], x, cfg, op, use_moe,
                     positions=positions, state=st_i, mode=mode,
                 )
                 new_states[f"pos{i}"] = new_st
@@ -320,7 +280,7 @@ def lm_apply(
             body, (x, jnp.zeros((), jnp.float32)), xs
         )
     else:
-        kind = _mixer_kind(cfg)
+        op = seq_op.op_for(cfg)
         use_moe = cfg.moe is not None
 
         def layer_body(carry, inp):
@@ -328,7 +288,7 @@ def lm_apply(
             x = constrain(x, ("batch", "seq", "embed"))
             st = inp.get("state")
             x, new_st, a = layer_apply(
-                inp["params"], x, cfg, kind, use_moe,
+                inp["params"], x, cfg, op, use_moe,
                 positions=positions, state=st, mode=mode,
             )
             ys = new_st if collect_state else 0.0
@@ -357,11 +317,12 @@ def lm_apply(
 def lm_prefill(params, tokens, cfg, *, states=None, positions=None):
     """Chunk-parallel prompt prefill for serving admission.
 
-    Runs the whole prompt through ``mode="prefill"`` — for streaming mixers
-    (hla2/ahla/...) each layer is ONE chunkwise call (the Pallas stateful
-    kernel on TPU, jnp chunkwise on CPU), never a per-token Python loop —
-    and returns ``(last_logits, states)``: the logits of the final prompt
-    position (to sample the first generated token) plus the decode states.
+    Runs the whole prompt through ``mode="prefill"`` — for streaming ops
+    (hla2/ahla/gla/...) each layer is ONE chunkwise call (the Pallas
+    stateful kernel on TPU, jnp chunkwise on CPU), never a per-token
+    Python loop — and returns ``(last_logits, states)``: the logits of the
+    final prompt position (to sample the first generated token) plus the
+    decode states.
     """
     logits, states, _ = lm_apply(
         params, tokens, cfg, states=states, positions=positions,

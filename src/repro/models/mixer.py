@@ -15,12 +15,19 @@ hla3_paper / linattn), with:
   backward walks checkpointed chunk states in reverse — cfg.hla.fused_bwd,
   DESIGN.md §3) or jnp chunkwise (CPU);
 * decode path: O(1)-state streaming steps (view A).
+
+Each variant is registered as ONE ``seq_op.SequenceOp`` record
+(DESIGN.md §11); the old five ``variant ==`` ladders are gone.  The
+Pallas-vs-jnp selection and the ``shard_ops.call_sharded`` mesh dispatch
+live inside each record's forward/step — lm / serving / distributed
+callers never see them.  ``mixer_apply``/``mixer_step``/
+``mixer_init_state``/``mixer_state_axes`` remain as thin registry-backed
+wrappers for direct (test / example) callers.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,14 +44,9 @@ core_lin = importlib.import_module("repro.core.linear_attn")
 from ..kernels import ops as kops
 from ..distributed import shard_ops
 from ..distributed.sharding import constrain
+from . import seq_op
 from .blocks import dense_apply, dense_specs
 from .param import Axes, Spec
-
-
-class MixerState(NamedTuple):
-    """Per-layer streaming state for decode."""
-
-    kind: Any  # pytree payload (core state NamedTuple)
 
 
 def mixer_specs(cfg):
@@ -109,117 +111,183 @@ _HLA2_STATE_NDIMS = core_hla2.HLA2State(4, 4, 3, 4, 3)
 _AHLA_STATE_NDIMS = core_ahla.AHLAState(4, 4, 3, 4, 3)
 
 
-def _variant(cfg):
-    """The operator actually requested: cfg.mixer names it when it is an
-    HLA-family mixer (the config override path sets cfg.mixer, not
-    cfg.hla.variant — a silent-hla2-everywhere bug caught by the recall
-    example producing identical losses for 'different' variants)."""
-    if cfg.mixer in ("hla2", "ahla", "hla3", "hla3_paper", "linattn"):
-        return cfg.mixer
-    return cfg.hla.variant
+# --------------------------------------------------------------------------
+# per-variant cores: full-sequence forward + one-token step over projected
+# (B, H, n, dh) rows.  Pallas/jnp/mesh selection is sealed in here.
+# --------------------------------------------------------------------------
 
 
-def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
-    """Training/prefill path over a full sequence.  Returns (out, final_state).
-
-    ``state`` is an optional streaming carry to resume from (incremental
-    prefill); every path below threads it through.
-    """
-    B, n, _ = x.shape
-    hc = cfg.hla
-    q, k, v = _project(p, x, cfg)
-    gamma = _gamma(p, cfg, B)
-    # hla2/ahla prefill (want_state) rides the stateful kernel API
-    # (kops.*_prefill returns the final carry); other variants still fall
-    # back to the jnp chunkwise path when states are needed.  Inside a mesh
-    # the kernel calls go through ``shard_ops.call_sharded``: each device
-    # runs the fused kernel on its local (batch x head) row block
-    # (batch -> "pod"/"data", heads -> "model"; DESIGN.md §9).
-    use_pallas = _pallas_enabled(hc)
-    kw = dict(normalize=hc.normalize, eps=1e-6)
-    variant = _variant(cfg)
-
-    if variant == "hla2":
-        if hc.impl == "scan":  # paper-faithful token-level Blelloch
-            o, st = core_hla2.hla2_scan(
-                q, k, v, gamma, lam=hc.lam, state=state, **kw
-            )
-        elif use_pallas and (want_state or state is not None):
-            # one chunk-parallel kernel call prefills the whole prompt and
-            # hands back the exact streaming state (Section-4 identity)
-            fn = functools.partial(
-                kops.hla2_prefill, chunk=hc.chunk, lam=hc.lam, **kw
-            )
-            o, st = shard_ops.call_sharded(
-                lambda q_, k_, v_, g_, s_: fn(q_, k_, v_, g_, state=s_),
-                q, k, v, gamma, state,
-                out_ndims=(4, _HLA2_STATE_NDIMS),
-            )
-        elif use_pallas:
-            o = shard_ops.call_sharded(
-                functools.partial(
-                    kops.hla2_attention, chunk=hc.chunk, lam=hc.lam,
-                    fused_bwd=hc.fused_bwd, **kw
-                ),
-                q, k, v, gamma, out_ndims=4,
-            )
-            st = None
-        else:
-            o, st = core_hla2.hla2_chunkwise(
-                q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, state=state, **kw
-            )
-    elif variant == "ahla":
-        if hc.impl == "scan":
-            o, st = core_ahla.ahla_scan(q, k, v, gamma, state=state, **kw)
-        elif use_pallas and (want_state or state is not None):
-            fn = functools.partial(kops.ahla_prefill, chunk=hc.chunk, **kw)
-            o, st = shard_ops.call_sharded(
-                lambda q_, k_, v_, g_, s_: fn(q_, k_, v_, g_, state=s_),
-                q, k, v, gamma, state,
-                out_ndims=(4, _AHLA_STATE_NDIMS),
-            )
-        elif use_pallas:
-            o = shard_ops.call_sharded(
-                functools.partial(
-                    kops.ahla_attention, chunk=hc.chunk,
-                    fused_bwd=hc.fused_bwd, **kw
-                ),
-                q, k, v, gamma, out_ndims=4,
-            )
-            st = None
-        else:
-            o, st = core_ahla.ahla_chunkwise(
-                q, k, v, gamma, chunk=hc.chunk, state=state, **kw
-            )
-    elif variant == "hla3":
-        o, st = core_hla3.hla3_exact_chunkwise(
-            q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+def _hla2_fwd(q, k, v, gamma, hc, *, state, want_state, kw):
+    if hc.impl == "scan":  # paper-faithful token-level Blelloch
+        return core_hla2.hla2_scan(q, k, v, gamma, lam=hc.lam, state=state, **kw)
+    if _pallas_enabled(hc) and (want_state or state is not None):
+        # one chunk-parallel kernel call prefills the whole prompt and
+        # hands back the exact streaming state (Section-4 identity)
+        fn = functools.partial(
+            kops.hla2_prefill, chunk=hc.chunk, lam=hc.lam, **kw
         )
-    elif variant == "hla3_paper":
-        o, st = core_hla3.hla3_paper_chunkwise(
-            q, k, v, chunk=hc.chunk, state=state, **kw
+        return shard_ops.call_sharded(
+            lambda q_, k_, v_, g_, s_: fn(q_, k_, v_, g_, state=s_),
+            q, k, v, gamma, state,
+            out_ndims=(4, _HLA2_STATE_NDIMS),
         )
-    elif variant == "linattn":
-        o, st = core_lin.linattn_chunkwise(
-            q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+    if _pallas_enabled(hc):
+        o = shard_ops.call_sharded(
+            functools.partial(
+                kops.hla2_attention, chunk=hc.chunk, lam=hc.lam,
+                fused_bwd=hc.fused_bwd, **kw
+            ),
+            q, k, v, gamma, out_ndims=4,
         )
-    else:
-        raise ValueError(variant)
-
-    o = _out_norm(p, o.astype(x.dtype), cfg)
-    o = o.swapaxes(1, 2).reshape(B, n, cfg.n_heads * cfg.head_dim)
-    o = constrain(o, ("batch", None, "q_heads_flat"))
-    return dense_apply(p["wo"], o), st
+        return o, None
+    return core_hla2.hla2_chunkwise(
+        q, k, v, gamma, chunk=hc.chunk, lam=hc.lam, state=state, **kw
+    )
 
 
-# Per-variant state-axes registry: every HLA-family decode-state leaf is a
-# ``(batch, heads, ...feature)`` row tensor, declared field-by-field below
-# so each variant is REGISTERED explicitly (hla3/hla3_paper included — the
-# old rank-based inference silently depended on every future state leaf
-# happening to follow the row layout).  Heads shard on "model" exactly like
-# the kernel row grid; this is the sharding source of truth for decode
-# states, consumed by ``distributed.steps.state_specs`` and the serving
-# ``StatePool``.
+def _hla2_step(state, q1, k1, v1, gamma, hc, kw):
+    if _pallas_enabled(hc):
+        return shard_ops.call_sharded(
+            functools.partial(kops.hla2_decode_step, lam=hc.lam, **kw),
+            state, q1, k1, v1, gamma,
+            out_ndims=(_HLA2_STATE_NDIMS, 3),
+        )
+    return core_hla2.hla2_step(state, q1, k1, v1, gamma, lam=hc.lam, **kw)
+
+
+def _ahla_fwd(q, k, v, gamma, hc, *, state, want_state, kw):
+    if hc.impl == "scan":
+        return core_ahla.ahla_scan(q, k, v, gamma, state=state, **kw)
+    if _pallas_enabled(hc) and (want_state or state is not None):
+        fn = functools.partial(kops.ahla_prefill, chunk=hc.chunk, **kw)
+        return shard_ops.call_sharded(
+            lambda q_, k_, v_, g_, s_: fn(q_, k_, v_, g_, state=s_),
+            q, k, v, gamma, state,
+            out_ndims=(4, _AHLA_STATE_NDIMS),
+        )
+    if _pallas_enabled(hc):
+        o = shard_ops.call_sharded(
+            functools.partial(
+                kops.ahla_attention, chunk=hc.chunk,
+                fused_bwd=hc.fused_bwd, **kw
+            ),
+            q, k, v, gamma, out_ndims=4,
+        )
+        return o, None
+    return core_ahla.ahla_chunkwise(
+        q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+    )
+
+
+def _ahla_step(state, q1, k1, v1, gamma, hc, kw):
+    if _pallas_enabled(hc):
+        return shard_ops.call_sharded(
+            functools.partial(kops.ahla_decode_step, **kw),
+            state, q1, k1, v1, gamma,
+            out_ndims=(_AHLA_STATE_NDIMS, 3),
+        )
+    return core_ahla.ahla_step(state, q1, k1, v1, gamma, **kw)
+
+
+def _hla3_fwd(q, k, v, gamma, hc, *, state, want_state, kw):
+    return core_hla3.hla3_exact_chunkwise(
+        q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+    )
+
+
+def _hla3_step(state, q1, k1, v1, gamma, hc, kw):
+    return core_hla3.hla3_exact_step(state, q1, k1, v1, gamma, **kw)
+
+
+def _hla3_paper_fwd(q, k, v, gamma, hc, *, state, want_state, kw):
+    return core_hla3.hla3_paper_chunkwise(
+        q, k, v, chunk=hc.chunk, state=state, **kw
+    )
+
+
+def _hla3_paper_step(state, q1, k1, v1, gamma, hc, kw):
+    # n=1 chunkwise call: same state layout AND same gamma=1 semantics
+    # as the prefill path (the Alg.-3 step applied learned decay that
+    # the chunk path never saw — prefill-then-decode diverged)
+    return core_hla3.hla3_paper_chunk_step(state, q1, k1, v1, **kw)
+
+
+def _linattn_fwd(q, k, v, gamma, hc, *, state, want_state, kw):
+    return core_lin.linattn_chunkwise(
+        q, k, v, gamma, chunk=hc.chunk, state=state, **kw
+    )
+
+
+def _linattn_step(state, q1, k1, v1, gamma, hc, kw):
+    return core_lin.linattn_step(state, q1, k1, v1, gamma, **kw)
+
+
+# --------------------------------------------------------------------------
+# record assembly: shared projection/out-norm wrapper around each core
+# --------------------------------------------------------------------------
+
+
+def _sublayer_forward(core_fwd):
+    def forward(p, x, cfg, *, state=None, want_state=False, positions=None):
+        """Training/prefill path over a full sequence.  Returns
+        (out, final_state); ``state`` is an optional streaming carry to
+        resume from (incremental prefill)."""
+        B, n, _ = x.shape
+        hc = cfg.hla
+        q, k, v = _project(p, x, cfg)
+        gamma = _gamma(p, cfg, B)
+        kw = dict(normalize=hc.normalize, eps=1e-6)
+        o, st = core_fwd(q, k, v, gamma, hc, state=state,
+                         want_state=want_state, kw=kw)
+        o = _out_norm(p, o.astype(x.dtype), cfg)
+        o = o.swapaxes(1, 2).reshape(B, n, cfg.n_heads * cfg.head_dim)
+        o = constrain(o, ("batch", None, "q_heads_flat"))
+        return dense_apply(p["wo"], o), st
+
+    return forward
+
+
+def _sublayer_step(core_step):
+    def step(p, x_t, state, cfg, *, positions=None):
+        """One-token decode.  x_t: (B, 1, d).  Returns (out, new_state).
+
+        On TPU the hla2/ahla state update runs as ONE fused Pallas launch
+        over all (batch, head) rows with in-place state I/O
+        (kernels/decode_step.py); jnp steps remain the CPU path.
+        """
+        B = x_t.shape[0]
+        hc = cfg.hla
+        q, k, v = _project(p, x_t, cfg)  # (B, H, 1, dh)
+        q1, k1, v1 = q[..., 0, :], k[..., 0, :], v[..., 0, :]
+        gamma = _gamma(p, cfg, B)
+        kw = dict(normalize=hc.normalize, eps=1e-6)
+        state, o = core_step(state, q1, k1, v1, gamma, hc, kw)
+        o = o[..., None, :]  # (B, H, 1, dh)
+        o = _out_norm(p, o.astype(x_t.dtype), cfg)
+        o = o.swapaxes(1, 2).reshape(B, 1, cfg.n_heads * cfg.head_dim)
+        return dense_apply(p["wo"], o), state
+
+    return step
+
+
+def _mixer_init(core_init):
+    def init_state(cfg, B, *, max_len=0, dtype=None):
+        dh = cfg.head_dim
+        return core_init(
+            (B, cfg.n_heads), dh, dh,
+            jnp.float32 if dtype is None else dtype,
+        )
+
+    return init_state
+
+
+# Per-variant state axes: every HLA-family decode-state leaf is a
+# ``(batch, heads, ...feature)`` row tensor, declared field-by-field so
+# each variant's layout is EXPLICIT (hla3/hla3_paper included — rank-based
+# inference silently depended on every future state leaf happening to
+# follow the row layout).  Heads shard on "model" exactly like the kernel
+# row grid; consumed via ``SequenceOp.state_axes`` by
+# ``distributed.steps.state_specs`` and the serving ``StatePool``.
 _ROW_MAT = Axes(("batch", "q_heads", None, None))
 _ROW_VEC = Axes(("batch", "q_heads", None))
 
@@ -228,99 +296,66 @@ _HLA2_AXES = core_hla2.HLA2State(
 )
 _LINATTN_AXES = core_lin.LinAttnState(P=_ROW_MAT, m=_ROW_VEC)
 
-_STATE_AXES = {
-    "hla2": _HLA2_AXES,
-    "ahla": core_ahla.AHLAState(
-        R=_ROW_MAT, P=_ROW_MAT, m=_ROW_VEC, E=_ROW_MAT, n=_ROW_VEC
-    ),
-    "hla3": core_hla3.HLA3ExactState(inner=_LINATTN_AXES, outer=_HLA2_AXES),
-    "hla3_paper": core_hla3.HLA3ChunkState(
-        SK=_ROW_MAT, SQ=_ROW_MAT, P=_ROW_MAT, m=_ROW_VEC,
-        F=_ROW_MAT, eta=_ROW_VEC,
-    ),
-    "linattn": _LINATTN_AXES,
-}
+
+def _register(name, core_fwd, core_step, core_init, axes, ndims=None,
+              fused=False):
+    seq_op.register_op(seq_op.SequenceOp(
+        name=name,
+        specs=mixer_specs,
+        forward=_sublayer_forward(core_fwd),
+        step=_sublayer_step(core_step),
+        init_state=_mixer_init(core_init),
+        state_axes=lambda cfg, _axes=axes: _axes,
+        state_ndims=(None if ndims is None else (lambda cfg, _n=ndims: _n)),
+        streaming=True,
+        has_fused_kernels=fused,
+        spec_decodable=True,
+        param_key="mixer",
+    ))
 
 
-def mixer_state_axes(cfg):
-    """Logical axes pytree matching ``mixer_init_state`` leaf-for-leaf,
-    from the explicit per-variant registry above."""
-    variant = _variant(cfg)
-    if variant not in _STATE_AXES:
-        raise ValueError(
-            f"mixer variant {variant!r} has no state-axes registration"
-        )
-    return _STATE_AXES[variant]
+_register("hla2", _hla2_fwd, _hla2_step, core_hla2.hla2_init_state,
+          _HLA2_AXES, ndims=_HLA2_STATE_NDIMS, fused=True)
+_register("ahla", _ahla_fwd, _ahla_step, core_ahla.ahla_init_state,
+          core_ahla.AHLAState(R=_ROW_MAT, P=_ROW_MAT, m=_ROW_VEC,
+                              E=_ROW_MAT, n=_ROW_VEC),
+          ndims=_AHLA_STATE_NDIMS, fused=True)
+_register("hla3", _hla3_fwd, _hla3_step, core_hla3.hla3_exact_init_state,
+          core_hla3.HLA3ExactState(inner=_LINATTN_AXES, outer=_HLA2_AXES))
+# chunk-state layout: prefill (hla3_paper_chunkwise) and decode
+# (hla3_paper_chunk_step) share it; the Algorithm-3 10-field state only
+# serves the serial/scan fidelity paths.  Using it here made serving
+# impossible: prefill handed back a 6-field carry that could never be
+# scattered into a 10-field pool.
+_register("hla3_paper", _hla3_paper_fwd, _hla3_paper_step,
+          core_hla3.hla3_chunk_init_state,
+          core_hla3.HLA3ChunkState(SK=_ROW_MAT, SQ=_ROW_MAT, P=_ROW_MAT,
+                                   m=_ROW_VEC, F=_ROW_MAT, eta=_ROW_VEC))
+_register("linattn", _linattn_fwd, _linattn_step,
+          core_lin.linattn_init_state, _LINATTN_AXES)
 
 
-def mixer_init_state(cfg, B, dtype=jnp.float32):
-    H, dh = cfg.n_heads, cfg.head_dim
-    variant = _variant(cfg)
-    if variant == "hla2":
-        return core_hla2.hla2_init_state((B, H), dh, dh, dtype)
-    if variant == "ahla":
-        return core_ahla.ahla_init_state((B, H), dh, dh, dtype)
-    if variant == "hla3":
-        return core_hla3.hla3_exact_init_state((B, H), dh, dh, dtype)
-    if variant == "hla3_paper":
-        # chunk-state layout: prefill (hla3_paper_chunkwise) and decode
-        # (hla3_paper_chunk_step) share it; the Algorithm-3 10-field state
-        # only serves the serial/scan fidelity paths.  Using it here made
-        # serving impossible: prefill handed back a 6-field carry that
-        # could never be scattered into a 10-field pool.
-        return core_hla3.hla3_chunk_init_state((B, H), dh, dh, dtype)
-    if variant == "linattn":
-        return core_lin.linattn_init_state((B, H), dh, dh, dtype)
-    raise ValueError(variant)
+# --------------------------------------------------------------------------
+# registry-backed wrappers (direct callers: tests, examples, whisper compat)
+# --------------------------------------------------------------------------
+
+
+def mixer_apply(p, x, cfg, want_state: bool = False, state=None):
+    """Full-sequence apply through the registered record for ``cfg``."""
+    return seq_op.op_for(cfg).forward(
+        p, x, cfg, state=state, want_state=want_state
+    )
 
 
 def mixer_step(p, x_t, state, cfg):
-    """One-token decode.  x_t: (B, 1, d).  Returns (out, new_state).
+    """One-token decode through the registered record for ``cfg``."""
+    return seq_op.op_for(cfg).step(p, x_t, state, cfg)
 
-    On TPU the hla2/ahla state update runs as ONE fused Pallas launch over
-    all (batch, head) rows with in-place state I/O (kernels/decode_step.py)
-    instead of the per-summary einsum chain; jnp steps remain the CPU path.
-    """
-    B = x_t.shape[0]
-    hc = cfg.hla
-    q, k, v = _project(p, x_t, cfg)  # (B, H, 1, dh)
-    q1, k1, v1 = q[..., 0, :], k[..., 0, :], v[..., 0, :]
-    gamma = _gamma(p, cfg, B)
-    kw = dict(normalize=hc.normalize, eps=1e-6)
-    fused_step = _pallas_enabled(hc)
-    variant = _variant(cfg)
-    if variant == "hla2":
-        if fused_step:
-            state, o = shard_ops.call_sharded(
-                functools.partial(kops.hla2_decode_step, lam=hc.lam, **kw),
-                state, q1, k1, v1, gamma,
-                out_ndims=(_HLA2_STATE_NDIMS, 3),
-            )
-        else:
-            state, o = core_hla2.hla2_step(
-                state, q1, k1, v1, gamma, lam=hc.lam, **kw
-            )
-    elif variant == "ahla":
-        if fused_step:
-            state, o = shard_ops.call_sharded(
-                functools.partial(kops.ahla_decode_step, **kw),
-                state, q1, k1, v1, gamma,
-                out_ndims=(_AHLA_STATE_NDIMS, 3),
-            )
-        else:
-            state, o = core_ahla.ahla_step(state, q1, k1, v1, gamma, **kw)
-    elif variant == "hla3":
-        state, o = core_hla3.hla3_exact_step(state, q1, k1, v1, gamma, **kw)
-    elif variant == "hla3_paper":
-        # n=1 chunkwise call: same state layout AND same gamma=1 semantics
-        # as the prefill path (the Alg.-3 step applied learned decay that
-        # the chunk path never saw — prefill-then-decode diverged)
-        state, o = core_hla3.hla3_paper_chunk_step(state, q1, k1, v1, **kw)
-    elif variant == "linattn":
-        state, o = core_lin.linattn_step(state, q1, k1, v1, gamma, **kw)
-    else:
-        raise ValueError(variant)
-    o = o[..., None, :]  # (B, H, 1, dh)
-    o = _out_norm(p, o.astype(x_t.dtype), cfg)
-    o = o.swapaxes(1, 2).reshape(B, 1, cfg.n_heads * cfg.head_dim)
-    return dense_apply(p["wo"], o), state
+
+def mixer_init_state(cfg, B, dtype=jnp.float32):
+    return seq_op.op_for(cfg).init_state(cfg, B, dtype=dtype)
+
+
+def mixer_state_axes(cfg):
+    """Logical axes pytree matching ``mixer_init_state`` leaf-for-leaf."""
+    return seq_op.op_for(cfg).state_axes(cfg)

@@ -42,15 +42,15 @@ def moe_specs(cfg):
     return {"router": dense_specs(d, E, axes=("embed", "experts")), **expert}
 
 
-def _expert_ffn(p, x, kind):
+def _expert_ffn(p, x, act):
     """x: (B, E, C, d) -> (B, E, C, d) with per-expert weights."""
-    if kind == "swiglu":
+    if act == "swiglu":
         g = jnp.einsum("becd,edf->becf", x, p["wi_gate"].astype(x.dtype))
         u = jnp.einsum("becd,edf->becf", x, p["wi_up"].astype(x.dtype))
         h = jax.nn.silu(g) * u
     else:
         h = jnp.einsum("becd,edf->becf", x, p["wi"].astype(x.dtype))
-        if kind == "squared_relu":
+        if act == "squared_relu":
             h = jnp.square(jax.nn.relu(h))
         else:
             h = jax.nn.gelu(h)

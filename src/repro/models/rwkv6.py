@@ -227,3 +227,36 @@ def rwkv6_state_axes() -> RWKVState:
         x_prev_c=Axes(("batch", None, None)),
         S=Axes(("batch", "q_heads", None, None)),
     )
+
+
+# --------------------------------------------------------------------------
+# SequenceOp registration: rwkv6 is SELF-CONTAINED (owns its norms and the
+# channel mix — token-shift state crosses both sublayers), so its record
+# replaces the whole pre-norm block rather than just the token mixer.
+# --------------------------------------------------------------------------
+
+
+def _rwkv6_forward(p, x, cfg, *, state=None, want_state=False,
+                   positions=None):
+    return rwkv6_layer_apply(p, x, cfg, state)
+
+
+def _rwkv6_step(p, x_t, state, cfg, *, positions=None):
+    return rwkv6_layer_apply(p, x_t, cfg, state)
+
+
+from . import seq_op as _seq_op  # noqa: E402
+
+_seq_op.register_op(_seq_op.SequenceOp(
+    name="rwkv6",
+    specs=rwkv6_specs,
+    forward=_rwkv6_forward,
+    step=_rwkv6_step,
+    init_state=lambda cfg, B, *, max_len=0, dtype=None: rwkv6_init_state(
+        cfg, B, jnp.float32 if dtype is None else dtype
+    ),
+    state_axes=lambda cfg: rwkv6_state_axes(),
+    streaming=True,
+    spec_decodable=True,
+    self_contained=True,
+))

@@ -171,3 +171,35 @@ def mamba_state_axes() -> MambaState:
         conv=Axes(("batch", None, "inner")),
         h=Axes(("batch", "inner", None)),
     )
+
+
+# --------------------------------------------------------------------------
+# SequenceOp registration
+# --------------------------------------------------------------------------
+
+
+def _mamba_forward(p, x, cfg, *, state=None, want_state=False,
+                   positions=None):
+    return mamba_apply(p, x, cfg, state=state)
+
+
+def _mamba_step(p, x_t, state, cfg, *, positions=None):
+    return mamba_apply(p, x_t, cfg, state=state)
+
+
+from . import seq_op as _seq_op  # noqa: E402
+
+_seq_op.register_op(_seq_op.SequenceOp(
+    name="mamba",
+    specs=mamba_specs,
+    forward=_mamba_forward,
+    step=_mamba_step,
+    init_state=lambda cfg, B, *, max_len=0, dtype=None: mamba_init_state(
+        cfg, B, jnp.float32 if dtype is None else dtype
+    ),
+    state_axes=lambda cfg: mamba_state_axes(),
+    streaming=True,
+    spec_decodable=True,
+    prealloc_state=True,  # hybrid (jamba) prefill preallocates the whole
+    #   stacked state tree so the group scan has a uniform carry
+))

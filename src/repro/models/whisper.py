@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from . import attention as attn_mod
-from . import mixer as mixer_mod
+from . import seq_op
 from .blocks import (
     embed_apply,
     layernorm_apply,
@@ -41,20 +41,37 @@ def _enc_layer_specs(cfg):
     }
 
 
+def _self_op(cfg) -> seq_op.SequenceOp:
+    """The decoder's causal self-mixing op (registry-resolved).  Softmax
+    stays a whisper-local attention call (no RoPE — learned positional
+    embeddings); any STREAMING registered op drops in via its record.
+    Self-contained ops (rwkv6) own their norms/FFN and cannot slot into
+    the encoder-decoder block structure."""
+    op = seq_op.op_for(cfg)
+    if op.self_contained:
+        raise seq_op.SequenceOpError(
+            f"whisper decoder cannot host self-contained op {op.name!r} "
+            "(it replaces the whole block; the decoder needs a sublayer)"
+        )
+    return op
+
+
+def _self_key(op) -> str:
+    # param-tree key kept stable for existing checkpoints
+    return "self" if not op.streaming else "self_mixer"
+
+
 def _dec_layer_specs(cfg):
-    s = {
+    op = _self_op(cfg)
+    return {
         "ln1": layernorm_specs(cfg.d_model),
         "ln_x": layernorm_specs(cfg.d_model),
         "cross_q": attn_mod.attention_specs(cfg),  # wq/wo used; wk/wv unused
         "cross_kv": attn_mod.cross_kv_specs(cfg),
         "ln2": layernorm_specs(cfg.d_model),
         "mlp": mlp_specs(cfg.d_model, cfg.d_ff, "gelu"),
+        _self_key(op): op.specs(cfg),
     }
-    if cfg.mixer == "softmax":
-        s["self"] = attn_mod.attention_specs(cfg)
-    else:
-        s["self_mixer"] = mixer_mod.mixer_specs(cfg)
-    return s
 
 
 def whisper_specs(cfg):
@@ -115,6 +132,8 @@ def whisper_decode(
     x = x + pos[None]
 
     collect = mode in ("prefill", "decode")
+    op = _self_op(cfg)
+    key = _self_key(op)
 
     def body(carry, inp):
         x = carry
@@ -122,21 +141,18 @@ def whisper_decode(
         p = inp["params"]
         st = inp.get("state")
         h = layernorm_apply(p["ln1"], x, cfg.norm_eps)
-        if cfg.mixer == "softmax":
+        if not op.streaming:  # softmax: whisper-local, no RoPE
             cache = st["self"] if st is not None else None
             y, new_self = attn_mod.attention_apply(
-                p["self"], h, cfg, positions=positions, cache=cache,
+                p[key], h, cfg, positions=positions, cache=cache,
                 use_rope=False,
             )
+        elif mode == "decode":
+            y, new_self = op.step(p[key], h, st["self"], cfg)
         else:
-            if mode == "decode":
-                y, new_self = mixer_mod.mixer_step(
-                    p["self_mixer"], h, st["self"], cfg
-                )
-            else:
-                y, new_self = mixer_mod.mixer_apply(
-                    p["self_mixer"], h, cfg, want_state=(mode == "prefill")
-                )
+            y, new_self = op.forward(
+                p[key], h, cfg, want_state=(mode == "prefill")
+            )
         x = x + y
         # cross attention (non-causal over encoder output); at prefill the
         # cross K/V are computed fresh from the encoder (the passed state
@@ -191,13 +207,10 @@ def whisper_apply(
 
 
 def whisper_init_states(cfg, B, max_len):
-    """Decode states: self KV cache (or mixer state) + cross K/V buffers."""
-    if cfg.mixer == "softmax":
-        self_st = attn_mod.init_kv_cache(B, cfg.n_kv_heads, max_len, cfg.head_dim)
-    else:
-        self_st = mixer_mod.mixer_init_state(cfg, B)
+    """Decode states: self state from the op record (KV cache for attn,
+    streaming state otherwise) + cross K/V buffers."""
     one = {
-        "self": self_st,
+        "self": _self_op(cfg).init_state(cfg, B, max_len=max_len),
         "cross_k": jnp.zeros(
             (B, cfg.n_kv_heads, cfg.enc_frames, cfg.head_dim), jnp.bfloat16
         ),
@@ -216,12 +229,8 @@ def whisper_state_axes(cfg):
     stacking dim) — see ``lm.lm_state_axes``."""
     from .param import Axes
 
-    if cfg.mixer == "softmax":
-        self_ax = attn_mod.kv_cache_axes()
-    else:
-        self_ax = mixer_mod.mixer_state_axes(cfg)
     one = {
-        "self": self_ax,
+        "self": _self_op(cfg).state_axes(cfg),
         "cross_k": Axes(("batch", "kv_heads", None, None)),
         "cross_v": Axes(("batch", "kv_heads", None, None)),
     }

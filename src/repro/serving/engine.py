@@ -48,13 +48,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import lm
+from ..models import lm, seq_op
 from .sampling import SamplingConfig, sample
 from .spec import SpecConfig, build_drafter
 from .spec.verify import make_spec_round
 from .state_pool import StatePool
-
-STREAMING_MIXERS = ("hla2", "ahla", "hla3", "hla3_paper", "linattn", "rwkv6")
 
 
 @dataclasses.dataclass
@@ -93,12 +91,24 @@ class Engine:
         mesh=None,
         spec: Optional[SpecConfig] = None,
     ):
-        if cfg.mixer not in STREAMING_MIXERS or cfg.group_size:
+        # serveability is a REGISTRY capability, not a hardcoded tuple:
+        # any op registered with streaming=True (O(1) decode state) admits
+        # per-slot continuous batching; KV-cache ops (attn) and hybrid
+        # stacks share a pooled scalar length across slots and cannot.
+        op = seq_op.op_for(cfg)
+        if not op.streaming or cfg.group_size:
             raise ValueError(
-                f"Engine serves streaming-state archs {STREAMING_MIXERS}; "
-                f"mixer={cfg.mixer!r} (group_size={cfg.group_size}) decodes "
-                "from a KV cache whose pooled scalar length is shared across "
-                "slots — continuous batching needs per-slot lengths"
+                "Engine serves streaming-state ops "
+                f"{seq_op.streaming_op_names()}; op {op.name!r} "
+                f"(group_size={cfg.group_size}) decodes from a KV cache "
+                "whose pooled scalar length is shared across slots — "
+                "continuous batching needs per-slot lengths"
+            )
+        if spec is not None and not op.spec_decodable:
+            raise ValueError(
+                f"op {op.name!r} is not registered spec_decodable: its "
+                "state cannot be snapshot/rolled back for speculative "
+                "verification"
             )
         self.cfg = cfg
         self.params = params

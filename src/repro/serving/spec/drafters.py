@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...models import lm
+from ...models import lm, seq_op
 from ...models.param import init_params
 from ..sampling import SamplingConfig, probs, sample
 from ..state_pool import StatePool
@@ -166,12 +166,12 @@ class HLADrafter(Drafter):
     def __init__(self, cfg, params=None, *, slots: int, max_len: int,
                  k: int, sampling: SamplingConfig = SamplingConfig(),
                  seed: int = 0, mesh=None):
-        from ..engine import STREAMING_MIXERS  # cycle-free at call time
-
-        if cfg.mixer not in STREAMING_MIXERS or cfg.group_size:
+        op = seq_op.op_for(cfg)
+        if not op.streaming or cfg.group_size:
             raise ValueError(
-                f"HLADrafter needs a streaming-state arch, got "
-                f"mixer={cfg.mixer!r} group_size={cfg.group_size}"
+                f"HLADrafter needs a streaming-state op "
+                f"{seq_op.streaming_op_names()}, got "
+                f"op={op.name!r} group_size={cfg.group_size}"
             )
         self.cfg = cfg
         self.k = k
