@@ -467,6 +467,7 @@ def bench_spec(rows):
             generated_tokens=0, ttft_s=[], spec_rounds=0, spec_drafted=0,
             spec_accepted=0, spec_replays=0,
         )
+        eng.reset_breaker()  # warmup zero-acceptance must not leak
         results = eng.run(mk_reqs())
         st = eng.stats
         decode_toks = sum(len(r.tokens) - 1 for r in results)

@@ -1,14 +1,31 @@
 """Checkpointing: atomic, async, rotation, elastic restore.
 
 Format: a directory per step with one ``.npy`` per pytree leaf plus a
-``manifest.json`` (step, leaf paths/shapes/dtypes, user metadata).  Writes
-go to ``<dir>.tmp`` then a single atomic ``os.rename`` — a crash mid-save
-never corrupts the latest checkpoint.  Restore is *mesh-agnostic*: leaves
-are saved as full logical arrays and re-placed with whatever shardings the
-new mesh prescribes (elastic rescale).  On a real multi-host pod each
-process would write its addressable shards with offsets; the manifest
-format already records shapes/dtypes so that extension is local to
-``_save_leaf``/``_load_leaf`` (documented production note).
+``manifest.json`` (step, leaf paths/shapes/dtypes/crc32, user metadata).
+Writes go to ``<dir>.tmp`` then a single atomic ``os.rename`` — a crash
+mid-save never corrupts the latest checkpoint.  Restore is
+*mesh-agnostic*: leaves are saved as full logical arrays and re-placed
+with whatever shardings the new mesh prescribes (elastic rescale).  On a
+real multi-host pod each process would write its addressable shards with
+offsets; the manifest format already records shapes/dtypes so that
+extension is local to ``_save_leaf``/``_load_leaf`` (documented
+production note).
+
+Failure domains (DESIGN.md §12):
+
+* every leaf's manifest entry carries a crc32 of its raw bytes, verified
+  on restore — silent storage corruption fails loudly as
+  ``CheckpointError`` naming the damaged leaf instead of resuming
+  training from garbage (atomic rename only protects against *torn*
+  saves, not against bit rot after publish);
+* the async save thread never swallows exceptions: a failed background
+  save is captured and re-raised as ``CheckpointError`` from the next
+  ``wait()`` or ``save()``, so the training loop finds out at the
+  checkpoint cadence rather than discovering a missing checkpoint at
+  restore time;
+* ``CheckpointManager(faults=...)`` consumes the ``ckpt.save`` /
+  ``ckpt.corrupt`` points of ``runtime.faults`` for deterministic
+  chaos tests of both paths.
 """
 
 from __future__ import annotations
@@ -18,10 +35,17 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint operation failed: an async save raised (surfaced on
+    the next ``wait()``/``save()``) or a restore hit a checksum
+    mismatch."""
 
 
 def _flatten(tree, prefix=""):
@@ -80,6 +104,9 @@ def save_checkpoint(directory: str, step: int, tree, metadata: Optional[dict] = 
         np.save(os.path.join(tmp, fn), arr)
         manifest["leaves"][name] = {
             "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            # content checksum over the raw array bytes (not the .npy
+            # header): restore verifies it so bit rot fails loudly
+            "crc32": zlib.crc32(arr.tobytes()),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -126,28 +153,71 @@ def restore_checkpoint(
             flat[name] = None
             continue
         arr = np.load(os.path.join(path, info["file"]))
+        want = info.get("crc32")  # absent on pre-checksum checkpoints
+        if want is not None:
+            got = zlib.crc32(arr.tobytes())
+            if got != want:
+                raise CheckpointError(
+                    f"checksum mismatch for leaf {name!r} in {path} "
+                    f"(manifest crc32={want}, file crc32={got}): "
+                    "checkpoint is corrupt"
+                )
         sh = flat_shard.get(name)
         flat[name] = jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
     return _unflatten_into(template, flat), manifest
 
 
-class CheckpointManager:
-    """keep-N rotation + optional async save thread."""
+def _corrupt_leaf(path: str) -> None:
+    """Flip trailing DATA bytes of the first leaf file under ``path`` (the
+    ``ckpt.corrupt`` fault point).  Trailing bytes so the ~128-byte .npy
+    header survives and the damage is only detectable by checksum —
+    exactly the silent-bit-rot scenario the manifest crc32 guards."""
+    leaves = sorted(
+        f for f in os.listdir(path) if f.endswith(".npy")
+    )
+    if not leaves:
+        return
+    fn = os.path.join(path, leaves[0])
+    size = os.path.getsize(fn)
+    n = min(8, max(size - 80, 1))
+    with open(fn, "r+b") as f:
+        f.seek(size - n)
+        tail = f.read(n)
+        f.seek(size - n)
+        f.write(bytes(b ^ 0xFF for b in tail))
 
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+
+class CheckpointManager:
+    """keep-N rotation + optional async save thread.
+
+    Async failures are never silent: an exception in the save thread is
+    captured and re-raised as ``CheckpointError`` from the next
+    ``wait()`` (and hence the next ``save()``, which waits first).
+    """
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 faults=None):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
+        self.faults = faults  # runtime.faults.FaultPlan (ckpt.* points)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[tuple] = None  # (step, exception)
         os.makedirs(directory, exist_ok=True)
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            step, exc = self._error
+            self._error = None  # raise-and-clear: the manager stays usable
+            raise CheckpointError(
+                f"async checkpoint save for step {step} failed: {exc!r}"
+            ) from exc
 
     def save(self, step: int, tree, metadata=None, block: bool = False):
-        self.wait()  # one in-flight save at a time
+        self.wait()  # one in-flight save at a time; surfaces prior failure
         tree = jax.tree.map(
             lambda x: np.asarray(jax.device_get(x)), tree,
             is_leaf=lambda x: x is None,
@@ -158,11 +228,23 @@ class CheckpointManager:
         )
 
         def _work():
-            save_checkpoint(self.directory, step, tree, metadata)
+            if self.faults is not None:
+                self.faults.raise_if("ckpt.save")
+            path = save_checkpoint(self.directory, step, tree, metadata)
             self._rotate()
+            if self.faults is not None and \
+                    self.faults.hit("ckpt.corrupt") is not None:
+                _corrupt_leaf(path)
 
         if self.async_save and not block:
-            self._thread = threading.Thread(target=_work, daemon=False)
+
+            def _work_async():
+                try:
+                    _work()
+                except Exception as e:  # surfaced by the next wait()
+                    self._error = (step, e)
+
+            self._thread = threading.Thread(target=_work_async, daemon=False)
             self._thread.start()
         else:
             _work()

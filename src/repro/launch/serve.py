@@ -13,6 +13,14 @@ call scores them, rejections roll back via state snapshots.  ``--spec lm``
 drafts with a small HLA LM loaded from the ``--draft-arch`` registry entry
 (random weights here — the CLI has no trained draft checkpoint).
 
+``--inject point[@at[+]][:arg]`` (repeatable) schedules deterministic
+faults from the ``runtime.faults`` catalog — e.g.
+``--inject engine.nan_state@1:0`` poisons slot 0's state before the 2nd
+decode block (quarantine), ``--inject drafter.propose@0+`` crashes the
+drafter every round (circuit breaker -> plain fallback).  ``--deadline-s``
+gives every request a wall-clock budget; expired requests finish with
+``status="timeout"``.  The summary line counts terminal statuses.
+
 ``HOST_DEVICES=N`` simulates an N-device host mesh (like launch.train);
 params and slot states then come up sharded via the same
 ``distributed.sharding`` / ``distributed.steps`` source of truth the
@@ -31,6 +39,7 @@ if _hd:
     )
 
 import argparse  # noqa: E402
+import collections  # noqa: E402
 import functools  # noqa: E402
 import time  # noqa: E402
 
@@ -41,6 +50,7 @@ from ..configs import get_config  # noqa: E402
 from ..distributed import sharding as shd  # noqa: E402
 from ..models import lm  # noqa: E402
 from ..models.param import init_params  # noqa: E402
+from ..runtime.faults import FaultPlan, parse_fault  # noqa: E402
 from ..serving import Engine, GenRequest, SamplingConfig, SpecConfig  # noqa: E402
 from .mesh import make_mesh, mesh_summary  # noqa: E402
 
@@ -73,6 +83,13 @@ def main(argv=None):
                     help="configs entry for the --spec lm draft model "
                          "(loaded reduced)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget; expiry -> "
+                         "status=timeout with the partial stream")
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="POINT[@AT[+]][:ARG]",
+                    help="schedule a deterministic fault "
+                         "(runtime.faults catalog; repeatable)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced, mixer=args.mixer)
@@ -109,6 +126,7 @@ def main(argv=None):
                 rid=i,
                 prompt=rng.randint(2, cfg.vocab, size=args.prompt_len),
                 max_new=args.gen_len,
+                deadline_s=args.deadline_s,
             )
             for i in range(args.requests)
         ]
@@ -121,7 +139,14 @@ def main(argv=None):
             prefill_s=0.0, decode_s=0.0, prompt_tokens=0,
             generated_tokens=0, ttft_s=[], spec_rounds=0, spec_drafted=0,
             spec_accepted=0, spec_replays=0,
+            errors=0, timeouts=0, cancelled=0, quarantined=0,
+            breaker_trips=0,
         )
+        engine.reset_breaker()  # warmup zero-acceptance must not leak
+        # attach the fault plan AFTER the warmup run so injection-point
+        # hit counts start at the measured traffic, not at trace time
+        if args.inject:
+            engine.faults = FaultPlan(*[parse_fault(s) for s in args.inject])
         t0 = time.time()
         results = engine.run(requests)
         dt = time.time() - t0
@@ -129,7 +154,8 @@ def main(argv=None):
         gen = st["generated_tokens"]
         # each request's first token comes from the prefill call; count only
         # decode-block tokens against decode wall time
-        decode_toks = gen - len(results)
+        # (non-ok results may have produced no tokens at all)
+        decode_toks = max(gen - len(results), 0)
         ttft_ms = 1e3 * float(np.mean(st["ttft_s"])) if st["ttft_s"] else 0.0
         decode_tps = decode_toks / st["decode_s"] if st["decode_s"] else 0.0
         print(
@@ -146,6 +172,16 @@ def main(argv=None):
                 f"{decode_toks/max(st['spec_rounds'],1):.2f} committed "
                 "tok/round"
             )
+        statuses = collections.Counter(r.status for r in results)
+        status_str = " ".join(
+            f"{k}={statuses[k]}" for k in ("ok", "error", "timeout",
+                                           "cancelled") if statuses[k]
+        )
+        print(
+            f"[serve] statuses: {status_str or 'ok=0'} | "
+            f"quarantined={st['quarantined']} "
+            f"breaker_trips={st['breaker_trips']}"
+        )
     return len(results)
 
 

@@ -31,6 +31,7 @@ from ..distributed import sharding as shd  # noqa: E402
 from ..distributed import steps as steps_mod  # noqa: E402
 from ..models.param import init_params  # noqa: E402
 from ..optim import adamw  # noqa: E402
+from ..runtime.faults import FaultPlan, FaultSpec  # noqa: E402
 from ..runtime.ft import FaultTolerantLoop  # noqa: E402
 from .mesh import make_mesh, mesh_summary  # noqa: E402
 
@@ -49,7 +50,9 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--data", default="zipf")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="inject a train.step fault at this step "
+                         "(runtime.faults; exercises restart/resume)")
     ap.add_argument("--metrics", default=None)
     args = ap.parse_args(argv)
 
@@ -91,9 +94,12 @@ def main(argv=None):
                 for k, v in batch.items()
             }
 
+        faults = None
+        if args.fail_at_step is not None:
+            faults = FaultPlan(FaultSpec("train.step", at=args.fail_at_step))
         loop = FaultTolerantLoop(
             step_fn, stream, args.ckpt_dir, ckpt_every=args.ckpt_every,
-            metrics_path=args.metrics, fail_at_step=args.fail_at_step,
+            metrics_path=args.metrics, faults=faults,
             place_batch=place,
         )
         params, opt_state, last = loop.run(params, opt_state, args.steps)

@@ -9,7 +9,10 @@
 * a straggler/ hang watchdog: EWMA step time; a step slower than
   ``straggler_factor`` x EWMA logs a warning, and ``hang_timeout_s`` aborts
   the process non-zero so the cluster scheduler reschedules it;
-* simulated failure injection (``fail_at_step``) used by the restart test;
+* deterministic fault injection via ``runtime.faults`` (the
+  ``train.step`` point — the old ad-hoc ``fail_at_step`` knob — plus the
+  ``ckpt.*`` points, which the loop forwards to its
+  ``CheckpointManager``), used by the restart and chaos tests;
 * jsonl metrics logging.
 
 Elastic rescale: on resume the checkpoint is re-placed under the *current*
@@ -29,6 +32,7 @@ from typing import Callable, Optional
 import jax
 
 from ..checkpoint.manager import CheckpointManager
+from .faults import FaultPlan
 
 
 class StragglerWatchdog:
@@ -81,16 +85,16 @@ class FaultTolerantLoop:
         ckpt_every: int = 100,
         keep: int = 3,
         metrics_path: Optional[str] = None,
-        fail_at_step: Optional[int] = None,
+        faults: Optional[FaultPlan] = None,
         log=print,
         place_batch: Optional[Callable] = None,
     ):
         self.train_step = train_step
         self.data = data_stream
-        self.manager = CheckpointManager(ckpt_dir, keep=keep)
+        self.faults = faults
+        self.manager = CheckpointManager(ckpt_dir, keep=keep, faults=faults)
         self.ckpt_every = ckpt_every
         self.metrics_path = metrics_path
-        self.fail_at_step = fail_at_step
         self.log = log
         self.place_batch = place_batch or (lambda b: b)
         self.watchdog = StragglerWatchdog(log=log)
@@ -122,8 +126,11 @@ class FaultTolerantLoop:
         step = start
         try:
             for step in range(start, num_steps):
-                if self.fail_at_step is not None and step == self.fail_at_step:
-                    raise RuntimeError(f"injected failure at step {step}")
+                # hit index == step index on a fresh run from step 0;
+                # after a resume, hits restart at 0 while steps don't, so
+                # FaultSpec(at=N) means "the Nth step THIS process runs"
+                if self.faults is not None:
+                    self.faults.raise_if("train.step")
                 batch = self.place_batch(self.data.batch(step))
                 self.watchdog.arm(step)
                 t0 = time.time()

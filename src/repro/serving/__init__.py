@@ -15,6 +15,12 @@ Layering:
                    LM), chunk-parallel exact verification, and
                    state-snapshot rollback (DESIGN.md §10).
 
+The engine is also a failure-domain boundary (DESIGN.md §12): per-request
+statuses (``ok``/``error``/``timeout``/``cancelled``), deadline/cancel
+lifecycle, poisoned-state quarantine via fused finiteness checks, and a
+circuit breaker degrading speculative decode to plain blocks — all
+deterministically testable through ``runtime.faults``.
+
 ``launch.serve`` is a thin CLI over ``engine.Engine``.
 """
 

@@ -29,6 +29,20 @@ The serving pattern the paper's O(1)-state decode enables (DESIGN.md §8):
   rollback primitive at the host level (external schedulers,
   preemption, tests).  One host sync per round, as in the plain block
   path.
+* **Failure domains (DESIGN.md §12).**  The slot is the unit of failure,
+  exactly because the paper's state is constant-size: quarantining a
+  poisoned request is one O(1) scatter (``StatePool.reset_slot``), not a
+  paged-KV reconstruction.  Every per-request failure — invalid
+  admission, a non-finite slot state (detected by a fused finiteness
+  reduction riding the block's existing host sync), an expired
+  ``deadline_s``, an ``Engine.cancel`` — frees only its own slot and
+  becomes a ``GenResult.status`` (``ok``/``error``/``timeout``/
+  ``cancelled``); ``run()`` never raises out of its drive loop (a CI
+  guard enforces this).  Drafter failures trip a circuit breaker from
+  speculative to plain block decode — which preserves greedy output
+  token-for-token, since both paths emit the same argmax stream — with a
+  cooldown/half-open re-probe to recover.  All failure modes are
+  injectable deterministically via ``runtime.faults.FaultPlan``.
 
 KV-cache (softmax / hybrid) archs are rejected: their pooled cache keeps a
 *shared* scalar ``length``, so per-slot admission would need per-slot
@@ -41,18 +55,24 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import math
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models import lm, seq_op
+from ..runtime.faults import FaultPlan
 from .sampling import SamplingConfig, sample
 from .spec import SpecConfig, build_drafter
 from .spec.verify import make_spec_round
-from .state_pool import StatePool
+from .state_pool import StatePool, tree_finite
+
+#: GenResult.status values -> the stats counter each increments.
+_STATUS_COUNTERS = {"error": "errors", "timeout": "timeouts",
+                    "cancelled": "cancelled"}
 
 
 @dataclasses.dataclass
@@ -61,6 +81,10 @@ class GenRequest:
     prompt: np.ndarray  # (L,) int token ids
     max_new: int = 32
     eos_id: Optional[int] = None
+    # wall-clock budget in seconds, measured from submission (run() entry
+    # or direct admit()).  Checked once per block on the host — expiry
+    # finishes the slot with status="timeout" and the partial stream.
+    deadline_s: Optional[float] = None
     # per-request sampling override (None = the engine's default).  The
     # decode block re-traces when the SET of distinct configs across slots
     # changes; homogeneous traffic stays at one trace.
@@ -73,6 +97,10 @@ class GenResult:
     tokens: List[int]
     ttft_s: float  # admission -> first sampled token
     prompt_len: int
+    # "ok" | "error" | "timeout" | "cancelled".  Non-ok results keep the
+    # partial stream committed before the failure (possibly empty).
+    status: str = "ok"
+    error: Optional[str] = None
 
 
 class Engine:
@@ -90,6 +118,7 @@ class Engine:
         seed: int = 0,
         mesh=None,
         spec: Optional[SpecConfig] = None,
+        faults: Optional[FaultPlan] = None,
     ):
         # serveability is a REGISTRY capability, not a hardcoded tuple:
         # any op registered with streaming=True (O(1) decode state) admits
@@ -114,8 +143,10 @@ class Engine:
         self.params = params
         self.sampling = sampling
         self.block = block
+        self.max_len = max_len
         self.mesh = mesh
         self.spec = spec
+        self.faults = faults
         # sharded serving: slot states get explicit shardings (slots on
         # the data axis, heads on the model axis) from the same source of
         # truth the train/dry-run steps use — never a replicated tree.
@@ -140,19 +171,35 @@ class Engine:
         self._slot_out: List[List[int]] = [[] for _ in range(slots)]
         self._slot_ttft: List[float] = [0.0] * slots
         self._slot_scfg: List[SamplingConfig] = [sampling] * slots
+        self._slot_deadline: List[float] = [math.inf] * slots
+        self._enqueue_t: Dict[int, float] = {}
+        self._cancelled: Set[int] = set()
         self.results: Dict[int, GenResult] = {}
         self.key = jax.random.key(seed)
+        # spec circuit breaker: closed (speculating) -> open (plain
+        # blocks, counting down cooldown) -> half_open (one probe round)
+        self.breaker = {"state": "closed", "cooldown": 0, "zero_rounds": 0,
+                        "reason": None}
         self.stats = {
             "prefill_s": 0.0, "decode_s": 0.0,
             "prompt_tokens": 0, "generated_tokens": 0, "ttft_s": [],
             "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
             "spec_replays": 0,
+            "errors": 0, "timeouts": 0, "cancelled": 0,
+            "quarantined": 0, "breaker_trips": 0,
         }
+
+        pool = self.pool
 
         def _prefill(params, prompt, key, scfg):
             last_logits, states = lm.lm_prefill(params, prompt, cfg)
             tok = sample(last_logits, key, scfg)
-            return tok, states
+            # admission health check: rides the sync that already fetches
+            # the first sampled token (no extra round trip)
+            finite = tree_finite(states) & jnp.all(
+                jnp.isfinite(last_logits)
+            )
+            return tok, states, finite
 
         def _decode_block(params, states, tokens, positions, active, key,
                           sel, n_steps, scfgs):
@@ -188,7 +235,10 @@ class Engine:
                 states = jax.tree.map(
                     jax.lax.with_sharding_constraint, states, pool_shardings
                 )
-            return states, tok, pos, toks  # toks: (n_steps, slots)
+            # fused per-slot finiteness reduction over the post-block
+            # states: the quarantine flags ride the block's one host sync
+            finite = pool.finite_mask(states)
+            return states, tok, pos, toks, finite  # toks: (n_steps, slots)
 
         self._prefill = jax.jit(_prefill, static_argnames="scfg")
         self._decode_block = jax.jit(
@@ -221,19 +271,76 @@ class Engine:
             contextlib.nullcontext()
         )
 
+    # -- fault injection ----------------------------------------------------
+
+    def _raise_fault(self, point: str) -> None:
+        if self.faults is not None:
+            self.faults.raise_if(point)
+
+    def _inject_block_faults(self) -> None:
+        """Hit the once-per-block injection points (no-ops without a plan)."""
+        if self.faults is None:
+            return
+        slow = self.faults.hit("engine.slow_block")
+        if slow is not None:
+            time.sleep(slow.arg if slow.arg is not None else 0.05)
+        nan = self.faults.hit("engine.nan_state")
+        if nan is not None:
+            slot = int(nan.arg) if nan.arg is not None else 0
+            poison = jax.tree.map(
+                lambda x: jnp.full_like(x, jnp.nan)
+                if jnp.issubdtype(x.dtype, jnp.inexact) else x,
+                self.pool.read_slot(slot),
+            )
+            self.pool.write_slot(slot, poison)
+
     # -- admission ----------------------------------------------------------
 
     def free_slots(self) -> List[int]:
         return [s for s in range(self.pool.slots) if not self.active[s]]
 
+    def _validate(self, req: GenRequest) -> np.ndarray:
+        """Admission control: reject malformed requests before they touch
+        the pool.  Returns the prompt as an int32 array."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(
+                f"request {req.rid}: prompt must be a non-empty 1-D token "
+                f"array, got shape {prompt.shape}"
+            )
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"request {req.rid}: prompt dtype {prompt.dtype} is not "
+                "integer token ids"
+            )
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= self.cfg.vocab:
+            raise ValueError(
+                f"request {req.rid}: token ids [{lo}, {hi}] outside the "
+                f"vocab [0, {self.cfg.vocab})"
+            )
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1")
+        if len(prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(prompt)}) + max_new "
+                f"({req.max_new}) exceeds the engine's max_len "
+                f"{self.max_len}"
+            )
+        return prompt.astype(np.int32)
+
     def admit(self, slot: int, req: GenRequest) -> int:
         """Prefill ``req`` into ``slot``; returns the first sampled token.
 
         One chunk-parallel prefill call + one scatter write; live slots are
-        never read or written.
+        never read or written.  Raises on invalid requests and on prefill
+        failure — everything that can raise happens BEFORE the slot is
+        activated, so a failed admission leaves the engine untouched
+        (``run()`` converts the raise into a ``status="error"`` result).
         """
         if self.active[slot]:
             raise ValueError(f"slot {slot} is busy")
+        prompt_np = self._validate(req)
         scfg = req.sampling if req.sampling is not None else self.sampling
         if self.spec is not None and scfg != self.sampling:
             raise ValueError(
@@ -242,27 +349,52 @@ class Engine:
                 f"(engine={self.sampling}, request={scfg})"
             )
         t0 = time.perf_counter()
+        self._raise_fault("engine.prefill")
         self.key, sub = jax.random.split(self.key)
-        prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        prompt = jnp.asarray(prompt_np[None])
         with self._mesh_ctx():
-            first, state1 = self._prefill(self.params, prompt, sub, scfg)
+            first, state1, finite = self._prefill(
+                self.params, prompt, sub, scfg
+            )
             self.pool.write_slot(slot, state1)
-        first_tok = int(first[0])  # one sync per admission: TTFT endpoint
+        # one sync per admission (TTFT endpoint); the health flag rides it
+        first_host, finite_host = jax.device_get((first[0], finite))
+        if not bool(finite_host):
+            self.stats["quarantined"] += 1
+            self.pool.reset_slot(slot)
+            raise RuntimeError(
+                f"request {req.rid}: admission prefill produced a "
+                "non-finite state — slot quarantined"
+            )
+        first_tok = int(first_host)
         ttft = time.perf_counter() - t0
         self.tokens = self.tokens.at[slot, 0].set(first_tok)
-        self.positions = self.positions.at[slot, 0].set(len(req.prompt))
+        self.positions = self.positions.at[slot, 0].set(len(prompt_np))
         self.active[slot] = True
         self._slot_req[slot] = req
-        self._slot_out[slot] = [first_tok]
+        self._slot_out[slot] = []
         self._slot_ttft[slot] = ttft
         self._slot_scfg[slot] = scfg
-        if self.drafter is not None:
-            self.drafter.admit(
-                slot, [int(t) for t in req.prompt] + [first_tok]
-            )
+        t_start = self._enqueue_t.pop(req.rid, t0)
+        self._slot_deadline[slot] = (
+            t_start + req.deadline_s if req.deadline_s is not None
+            else math.inf
+        )
         self.stats["prefill_s"] += ttft
-        self.stats["prompt_tokens"] += len(req.prompt)
+        self.stats["prompt_tokens"] += len(prompt_np)
         self.stats["ttft_s"].append(ttft)
+        # the admission token goes through the ONE commit path, so a
+        # first-token EOS or max_new=1 finishes here instead of wasting a
+        # full decode block on an already-complete request
+        finished = self._commit(slot, [first_tok])
+        if not finished and self.drafter is not None \
+                and self.breaker["state"] == "closed":
+            try:
+                self.drafter.admit(
+                    slot, [int(t) for t in prompt_np] + [first_tok]
+                )
+            except Exception as e:  # drafter failure never fails admission
+                self._trip_breaker(f"drafter.admit failed: {e!r}")
         return first_tok
 
     def _commit(self, slot: int, toks) -> bool:
@@ -286,33 +418,179 @@ class Engine:
             return True
         return False
 
-    def _finish(self, slot: int) -> None:
+    def _finish(self, slot: int, status: str = "ok",
+                error: Optional[str] = None) -> None:
         req = self._slot_req[slot]
         out = self._slot_out[slot][: req.max_new]
         if req.eos_id is not None and req.eos_id in out:
             out = out[: out.index(req.eos_id) + 1]
         self.results[req.rid] = GenResult(
             rid=req.rid, tokens=out, ttft_s=self._slot_ttft[slot],
-            prompt_len=len(req.prompt),
+            prompt_len=len(req.prompt), status=status, error=error,
         )
+        if status in _STATUS_COUNTERS:
+            self.stats[_STATUS_COUNTERS[status]] += 1
         self.stats["generated_tokens"] += len(out)
         self.active[slot] = False
         self._slot_req[slot] = None
+        self._slot_deadline[slot] = math.inf
         # drop any per-request sampling override so the freed slot stops
         # contributing a stale config to the decode block's distinct set
         self._slot_scfg[slot] = self.sampling
         if self.drafter is not None:
             self.drafter.evict(slot)
 
+    def _fail(self, req: GenRequest, status: str, error: str) -> None:
+        """Record a terminal result for a request that never held a slot
+        (failed admission / pre-admission expiry / queued cancellation)."""
+        self._enqueue_t.pop(req.rid, None)
+        self.results[req.rid] = GenResult(
+            rid=req.rid, tokens=[], ttft_s=0.0,
+            prompt_len=len(np.atleast_1d(np.asarray(req.prompt))),
+            status=status, error=error,
+        )
+        if status in _STATUS_COUNTERS:
+            self.stats[_STATUS_COUNTERS[status]] += 1
+
+    def _quarantine(self, slot: int) -> None:
+        """A slot's state went non-finite: reset the state (O(state), one
+        scatter — untouched neighbours keep decoding) and fail only that
+        request.  The paper's constant-size state is what makes this the
+        cheap path: recovery never reconstructs a KV arena."""
+        self.stats["quarantined"] += 1
+        self.pool.reset_slot(slot)
+        self._finish(
+            slot, status="error",
+            error="non-finite decode state: slot quarantined and reset",
+        )
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request: a live slot finishes immediately with
+        ``status="cancelled"`` and its partial stream; a queued rid is
+        marked and rejected at its admission attempt.  Returns False when
+        the request already finished (nothing to cancel)."""
+        for s in range(self.pool.slots):
+            req = self._slot_req[s]
+            if self.active[s] and req is not None and req.rid == rid:
+                self._finish(s, status="cancelled",
+                             error="cancelled while decoding")
+                return True
+        if rid in self.results:
+            return False
+        self._cancelled.add(rid)
+        return True
+
+    def _expired(self, req: GenRequest) -> bool:
+        if req.deadline_s is None:
+            return False
+        t0 = self._enqueue_t.get(req.rid)
+        return t0 is not None and \
+            time.perf_counter() - t0 > req.deadline_s
+
+    def _sweep_deadlines(self) -> None:
+        """Once-per-block deadline enforcement (host side, no sync)."""
+        now = time.perf_counter()
+        for s in range(self.pool.slots):
+            if self.active[s] and now >= self._slot_deadline[s]:
+                req = self._slot_req[s]
+                self._finish(
+                    s, status="timeout",
+                    error=f"deadline_s={req.deadline_s} exceeded",
+                )
+
+    # -- circuit breaker (speculative -> plain fallback) --------------------
+
+    def _trip_breaker(self, reason: str) -> None:
+        cooldown = (self.spec.breaker_cooldown_blocks
+                    if self.spec is not None else 0)
+        self.breaker.update(state="open", cooldown=cooldown,
+                            zero_rounds=0, reason=reason)
+        self.stats["breaker_trips"] += 1
+
+    def reset_breaker(self) -> None:
+        """Re-close the breaker for a fresh traffic epoch.  Benchmarks and
+        the serve CLI call this together with their post-warmup stats
+        reset: a random-weights warmup can legitimately trip on
+        zero-acceptance rounds, and the measured run should start from
+        the closed state."""
+        self.breaker.update(state="closed", cooldown=0, zero_rounds=0,
+                            reason=None)
+
+    def _breaker_gate(self) -> bool:
+        """Advance the breaker state machine once per block; True when
+        this block may run a speculative round."""
+        b = self.breaker
+        if b["state"] == "closed":
+            return True
+        if b["state"] == "open":
+            if b["cooldown"] > 0:
+                b["cooldown"] -= 1
+                return False
+            b["state"] = "half_open"
+        return True  # half_open: probe this block
+
+    def _resync_drafter(self) -> None:
+        """Re-admit every live slot's committed context into the drafter
+        (it went stale while the breaker was open)."""
+        for s in range(self.pool.slots):
+            if self.active[s]:
+                req = self._slot_req[s]
+                ctx = [int(t) for t in req.prompt] + self._slot_out[s]
+                self.drafter.admit(s, ctx)
+
+    def _try_spec_round(self) -> bool:
+        """One breaker-supervised speculative round.  Returns True when
+        the round ran (or nothing was active); False means the breaker
+        tripped before any state mutation and the caller must fall back
+        to a plain block for this step."""
+        b = self.breaker
+        if b["state"] == "half_open":
+            try:
+                self._resync_drafter()
+            except Exception as e:
+                self._trip_breaker(f"drafter resync failed: {e!r}")
+                return False
+        try:
+            ran, accepted = self._spec_round()
+        except Exception as e:
+            # propose-phase failure: nothing was mutated yet, a plain
+            # block this step keeps the stream exact
+            self._trip_breaker(f"drafter crashed: {e!r}")
+            return False
+        if not ran:
+            return True  # no active slots: nothing to decode either way
+        if b["state"] == "half_open":
+            if accepted > 0:
+                b.update(state="closed", zero_rounds=0, reason=None)
+            else:
+                self._trip_breaker("half-open probe round accepted nothing")
+        elif b["state"] == "closed":
+            if accepted == 0:
+                b["zero_rounds"] += 1
+                if b["zero_rounds"] >= self.spec.breaker_zero_rounds:
+                    self._trip_breaker(
+                        f"{b['zero_rounds']} consecutive zero-acceptance "
+                        "rounds"
+                    )
+            else:
+                b["zero_rounds"] = 0
+        return True
+
     # -- decode -------------------------------------------------------------
 
     def step_block(self, n_steps: Optional[int] = None) -> None:
         """Advance every active slot: ``n_steps`` plain decode tokens, or
         ONE draft->verify->accept round (up to ``spec.k + 1`` tokens) in
-        speculative mode.  Either way: one host transfer."""
-        if self.spec is not None:
-            self._spec_round()
-            return
+        speculative mode.  Either way: one host transfer.  With the
+        circuit breaker open (or tripping on this very call) speculative
+        engines degrade to plain blocks — greedy output is unchanged."""
+        self._inject_block_faults()
+        if self.spec is not None and self._breaker_gate():
+            if self._try_spec_round():
+                self._sweep_deadlines()
+                return
         n_steps = self.block if n_steps is None else n_steps
         if n_steps <= 0:
             return
@@ -322,22 +600,28 @@ class Engine:
         sel = jnp.asarray([uniq.index(c) for c in self._slot_scfg])
         t0 = time.perf_counter()
         with self._mesh_ctx():
-            states, tok, pos, toks = self._decode_block(
+            states, tok, pos, toks, finite = self._decode_block(
                 self.params, self.pool.states, self.tokens, self.positions,
                 active_dev, sub, sel, n_steps=n_steps, scfgs=uniq,
             )
         self.pool.states = states
         self.tokens, self.positions = tok, pos
-        toks_host = np.asarray(toks)  # (n_steps, slots) — the block sync
+        # the block sync: tokens + quarantine flags in ONE transfer
+        toks_host, finite_host = jax.device_get((toks, finite))
+        toks_host = np.asarray(toks_host)
         self.stats["decode_s"] += time.perf_counter() - t0
         for s in range(self.pool.slots):
             if not self.active[s]:
                 continue
+            if not bool(finite_host[s]):
+                self._quarantine(s)
+                continue
             self._commit(s, toks_host[:, s])
+        self._sweep_deadlines()
 
     # -- speculative decode -------------------------------------------------
 
-    def _spec_round(self) -> None:
+    def _spec_round(self) -> Tuple[bool, int]:
         """draft -> verify -> accept for every active slot.
 
         The drafter proposes k tokens per slot (batched across slots);
@@ -348,13 +632,22 @@ class Engine:
         that executes exclusively on rejection rounds — full-acceptance
         rounds keep the verify pass's own final states for free), and
         advances tokens/positions on device.  One host transfer per round
-        (the packed accept/commit array), like the plain block path.
+        (the packed accept/commit array + quarantine flags), like the
+        plain block path.
+
+        Returns ``(ran, accepted)``: whether any slot was active, and the
+        total number of accepted draft tokens (the breaker's health
+        signal).  Drafter exceptions in the propose phase propagate (the
+        caller trips the breaker — nothing was mutated); commit-phase
+        drafter exceptions trip the breaker here but never lose verified
+        tokens.
         """
         k = self.spec.k
         slots_active = [s for s in range(self.pool.slots) if self.active[s]]
         if not slots_active:
-            return
+            return False, 0
         t0 = time.perf_counter()
+        self._raise_fault("drafter.propose")
         drafts, qp = self.drafter.propose(slots_active, k)
         if self.drafter.full_width:
             # device drafter, rows for every slot: feed straight through
@@ -385,37 +678,90 @@ class Engine:
         if self.drafter.emits_probs:
             args = args + (q_full,)
         with self._mesh_ctx():
-            packed, new_states, new_tokens, new_positions = \
+            packed, finite, new_states, new_tokens, new_positions = \
                 self._spec_step(*args)
         self.pool.states = new_states
         self.tokens, self.positions = new_tokens, new_positions
-        packed_h = np.asarray(packed)  # ONE host transfer per round
+        # ONE host transfer per round: commits + quarantine flags together
+        packed_h, finite_h = jax.device_get((packed, finite))
+        packed_h = np.asarray(packed_h)
         self.stats["spec_rounds"] += 1
-        if any(int(packed_h[s, 0]) < k for s in slots_active):
+        healthy = [s for s in slots_active if bool(finite_h[s])]
+        if any(int(packed_h[s, 0]) < k for s in healthy):
             self.stats["spec_replays"] += 1  # the rollback arm ran
+        accepted_total = 0
         for s in slots_active:
+            if not bool(finite_h[s]):
+                self._quarantine(s)
+                continue
             m = int(packed_h[s, 0])
             committed = [int(t) for t in packed_h[s, 1:m + 2]]
             self.stats["spec_drafted"] += k
             self.stats["spec_accepted"] += m
+            accepted_total += m
             if self._commit(s, committed):
                 continue  # finished: state is stale but the slot is free
-            self.drafter.commit(s, committed)
+            if self.breaker["state"] != "closed":
+                continue  # drafter already failed: skip its bookkeeping
+            try:
+                self.drafter.commit(s, committed)
+            except Exception as e:
+                self._trip_breaker(f"drafter.commit failed: {e!r}")
         self.stats["decode_s"] += time.perf_counter() - t0
+        return True, accepted_total
 
     # -- driver -------------------------------------------------------------
 
     def run(self, requests: List[GenRequest]) -> List[GenResult]:
-        """Serve ``requests`` to completion with continuous batching."""
+        """Serve ``requests`` to completion with continuous batching.
+
+        Every request gets a terminal ``GenResult`` — per-request
+        failures (invalid admission, poisoned state, expired deadline,
+        cancellation, even a decode-block crash) become non-``ok``
+        statuses on their own results while unaffected slots keep
+        decoding; the drive loop itself never raises (CI-enforced)."""
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             raise ValueError("request rids must be unique")
+        now = time.perf_counter()
+        for r in requests:
+            self._enqueue_t.setdefault(r.rid, now)
         pending = collections.deque(requests)
         while pending or self.active.any():
             for s in self.free_slots():
-                if not pending:
+                admitted = False
+                while pending and not admitted:
+                    req = pending.popleft()
+                    if req.rid in self._cancelled:
+                        self._cancelled.discard(req.rid)
+                        self._fail(req, "cancelled",
+                                   "cancelled before admission")
+                        continue
+                    if self._expired(req):
+                        self._fail(
+                            req, "timeout",
+                            f"deadline_s={req.deadline_s} expired before "
+                            "admission",
+                        )
+                        continue
+                    try:
+                        self.admit(s, req)
+                        admitted = True
+                    except Exception as e:
+                        self._fail(req, "error", f"admission failed: {e}")
+                if not pending and not admitted:
                     break
-                self.admit(s, pending.popleft())
             if self.active.any():
-                self.step_block()
+                try:
+                    self.step_block()
+                except Exception as e:
+                    # a failed block leaves every live slot's device state
+                    # suspect: fail them all (keeping partial streams) and
+                    # let the queue drain through fresh admissions
+                    for s in range(self.pool.slots):
+                        if self.active[s]:
+                            self._finish(
+                                s, status="error",
+                                error=f"decode block failed: {e!r}",
+                            )
         return [self.results[r.rid] for r in requests]

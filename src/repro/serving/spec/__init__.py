@@ -43,6 +43,16 @@ class SpecConfig:
     # "ngram" drafter: trailing n-gram sizes tried, longest first
     ngram_max: int = 3
     ngram_min: int = 1
+    # circuit breaker (DESIGN.md §12): a drafter exception — or
+    # ``breaker_zero_rounds`` consecutive rounds in which NO draft token
+    # was accepted — trips the engine from speculative to plain block
+    # decode (greedy output is token-for-token unchanged either way).
+    # After ``breaker_cooldown_blocks`` plain blocks the breaker goes
+    # half-open: the drafter is resynced with each live slot's committed
+    # context and probed for one round; success re-closes it, another
+    # failure re-opens it for a fresh cooldown.
+    breaker_zero_rounds: int = 4
+    breaker_cooldown_blocks: int = 8
 
 
 __all__ = [

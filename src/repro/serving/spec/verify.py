@@ -211,10 +211,15 @@ def make_spec_round(cfg, scfg: SamplingConfig, *, draft_probs: bool = False,
     into ONE jittable round — the engine's speculative hot path.
 
     ``round(params, states, tokens, positions, active, drafts, key[, q])
-    -> (packed, new_states, new_tokens, new_positions)``
+    -> (packed, finite, new_states, new_tokens, new_positions)``
 
     * ``packed`` — the verify output (``(slots, k+2)``: accepted count +
       committed tokens), the round's single host transfer;
+    * ``finite`` — ``(slots,)`` bool, True where every inexact leaf of
+      the slot's post-round state is fully finite (slot axis 1, the same
+      layout contract ``select_slots`` relies on).  Fetched together
+      with ``packed`` so poisoned-state quarantine (DESIGN.md §12) rides
+      the round's existing host sync;
     * ``new_states`` — the verify pass's own final states when EVERY
       active slot accepted its whole block (they consumed exactly the
       committed tokens: rollback is free), else — under a ``lax.cond``
@@ -248,10 +253,20 @@ def make_spec_round(cfg, scfg: SamplingConfig, *, draft_probs: bool = False,
         )
         if pool_shardings is not None:
             new_states = _pin(new_states, pool_shardings)
+        # fused finiteness reduction over the post-round states: every
+        # streaming state leaf is (layers, slots, ...) (the select_slots
+        # contract), so reducing all axes but 1 yields per-slot flags
+        finite = jnp.ones((tokens.shape[0],), bool)
+        for leaf in jax.tree.leaves(new_states):
+            if jnp.issubdtype(leaf.dtype, jnp.inexact):
+                finite = finite & jnp.all(
+                    jnp.isfinite(leaf),
+                    axis=tuple(i for i in range(leaf.ndim) if i != 1),
+                )
         last = jnp.take_along_axis(packed, (n_acc + 1)[:, None], axis=1)
         new_tokens = jnp.where(active[:, None], last.astype(tokens.dtype),
                                tokens)
         new_positions = positions + n_comm[:, None].astype(positions.dtype)
-        return packed, new_states, new_tokens, new_positions
+        return packed, finite, new_states, new_tokens, new_positions
 
     return round_fn

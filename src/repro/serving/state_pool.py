@@ -28,6 +28,18 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every inexact leaf of ``tree`` is fully finite.
+
+    Jit-safe; used by the engine's prefill to reject a poisoned admission
+    on the sync that already fetches the first sampled token."""
+    ok = jnp.asarray(True)
+    for leaf in jax.tree.leaves(tree):
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            ok = ok & jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
 def _slot_axis(shape_a, shape_b, slots: int) -> Optional[int]:
     """Axis along which ``shape_b`` (slots+1) grew out of ``shape_a`` (slots)."""
     if tuple(shape_a) == tuple(shape_b):
@@ -169,6 +181,35 @@ class StatePool:
         """Zero a slot (eviction)."""
         zeros = jax.tree.map(jnp.zeros_like, self.empty_slot_state())
         self.write_slot(slot, zeros)
+
+    # -- health -------------------------------------------------------------
+
+    def finite_mask(self, states=None) -> jnp.ndarray:
+        """``(slots,)`` bool: True where every inexact state leaf of that
+        slot is fully finite — the fused device-side reduction behind
+        poisoned-state quarantine (DESIGN.md §12).
+
+        Jit-safe: the engine computes it INSIDE the decode block so the
+        flags ride the block's existing once-per-block host transfer —
+        detecting a NaN-poisoned slot costs zero extra round trips.
+        Leaves without a slot axis are shared across slots, so a
+        non-finite shared leaf poisons every slot (there is no smaller
+        recovery unit).  Integer leaves cannot be non-finite and are
+        skipped.
+        """
+        src = self.states if states is None else states
+        ok = jnp.ones((self.slots,), bool)
+        for ax, leaf in zip(self.slot_axes, self._flatten(src)):
+            if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                continue
+            fin = jnp.isfinite(leaf)
+            if ax is None:
+                ok = ok & jnp.all(fin)
+            else:
+                ok = ok & jnp.all(
+                    fin, axis=tuple(i for i in range(leaf.ndim) if i != ax)
+                )
+        return ok
 
     # -- snapshot / rollback (speculative decoding) -------------------------
 

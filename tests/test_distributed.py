@@ -399,7 +399,7 @@ def test_train_cli_failure_restart(tmp_path):
     p1 = subprocess.run(args + ["--fail-at-step", "9"], capture_output=True,
                         text=True, timeout=900, env=env, cwd=REPO)
     assert p1.returncode != 0
-    assert "injected failure" in p1.stderr
+    assert "injected fault at point 'train.step'" in p1.stderr
     p2 = subprocess.run(args, capture_output=True, text=True, timeout=900,
                         env=env, cwd=REPO)
     assert p2.returncode == 0, p2.stderr[-2000:]

@@ -140,6 +140,7 @@ def test_manager_rotation_and_async(tmp_path, rng):
 def test_ft_loop_failure_and_resume(tmp_path):
     """Inject a failure; restarting resumes from the checkpoint and
     reproduces the exact final state of an uninterrupted run."""
+    from repro.runtime.faults import FaultPlan, FaultSpec, InjectedFault
     from repro.runtime.ft import FaultTolerantLoop
 
     def step_fn(params, opt_state, batch):
@@ -157,9 +158,11 @@ def test_ft_loop_failure_and_resume(tmp_path):
 
     ck = str(tmp_path / "ck")
     loop = FaultTolerantLoop(
-        step_fn, stream, ck, ckpt_every=3, fail_at_step=7, log=lambda *_: None
+        step_fn, stream, ck, ckpt_every=3,
+        faults=FaultPlan(FaultSpec("train.step", at=7)),
+        log=lambda *_: None,
     )
-    with pytest.raises(RuntimeError, match="injected failure"):
+    with pytest.raises(InjectedFault, match="train.step"):
         loop.run(p0, None, 10)
     # restart (fresh loop object, as a new process would)
     loop2 = FaultTolerantLoop(step_fn, stream, ck, ckpt_every=3,
