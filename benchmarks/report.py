@@ -123,6 +123,10 @@ def render_serving():
         "| metric | value |",
         "|---|---|",
         f"| TTFT (mean, chunk-parallel prefill) | {r['ttft_ms_mean']:.1f} ms |",
+        # p50/p99 appear once the serving bench re-runs with the obs
+        # registry (older serving.json artifacts predate them)
+        *([f"| TTFT p50 / p99 | {r['ttft_ms_p50']:.1f} / "
+           f"{r['ttft_ms_p99']:.1f} ms |"] if "ttft_ms_p50" in r else []),
         f"| steady-state decode | {r['decode_tok_per_s']:.1f} tok/s |",
         f"| prefill throughput | {r['prefill_tok_per_s']:.1f} tok/s |",
         "\n(interpret-mode numbers on CPU are not indicative — compare on "

@@ -265,14 +265,15 @@ def bench_serving(rows):
         for i in range(8)
     ]
     # warm the jits (prefill trace + decode-block trace), then measure
+    # from a fresh obs epoch (zeroes every metric series + event ring)
     engine.run([GenRequest(rid=-1, prompt=reqs[0].prompt, max_new=block)])
-    engine.stats.update(
-        prefill_s=0.0, decode_s=0.0, prompt_tokens=0,
-        generated_tokens=0, ttft_s=[],
-    )
+    engine.obs.reset()
     results = engine.run(reqs)
     st = engine.stats
+    ttft_hist = engine.obs.registry.get("serving_ttft_seconds")
     ttft_ms = 1e3 * float(np.mean(st["ttft_s"]))
+    ttft_p50 = 1e3 * (ttft_hist.quantile(0.5) or 0.0)
+    ttft_p99 = 1e3 * (ttft_hist.quantile(0.99) or 0.0)
     # exclude each request's first token (produced by prefill) from the
     # steady-state decode rate
     decode_toks = sum(len(r.tokens) - 1 for r in results)
@@ -280,7 +281,8 @@ def bench_serving(rows):
     backend = jax.default_backend()
     rows.append((
         "serving/ttft", ttft_ms * 1e3,
-        f"ttft_ms={ttft_ms:.1f} prompt_len={prompt_len} backend={backend}",
+        f"ttft_ms_p50={ttft_p50:.1f} p99={ttft_p99:.1f} "
+        f"prompt_len={prompt_len} backend={backend}",
     ))
     rows.append((
         "serving/decode", 0.0,
@@ -294,10 +296,16 @@ def bench_serving(rows):
                       "gen_len": gen_len, "block": block,
                       "requests": len(reqs)},
             "ttft_ms_mean": round(ttft_ms, 2),
+            "ttft_ms_p50": round(ttft_p50, 2),
+            "ttft_ms_p99": round(ttft_p99, 2),
             "decode_tok_per_s": round(tok_s, 1),
             "prefill_tok_per_s": round(
                 st["prompt_tokens"] / max(st["prefill_s"], 1e-9), 1
             ),
+            # the same snapshot schema the serve CLI's --metrics-out dumps,
+            # scoped to the bench's engine (report.py and ad-hoc tooling
+            # can consume either artifact identically)
+            "metrics": engine.obs.snapshot(),
         }, f, indent=1)
 
 
@@ -462,11 +470,7 @@ def bench_spec(rows):
             max_len=len(prompt) + gen_len + 16, block=8, spec=spec,
         )
         eng.run([GenRequest(rid=-1, prompt=prompt, max_new=16)])  # warm jits
-        eng.stats.update(
-            prefill_s=0.0, decode_s=0.0, prompt_tokens=0,
-            generated_tokens=0, ttft_s=[], spec_rounds=0, spec_drafted=0,
-            spec_accepted=0, spec_replays=0,
-        )
+        eng.obs.reset()  # fresh metrics epoch for the measured traffic
         eng.reset_breaker()  # warmup zero-acceptance must not leak
         results = eng.run(mk_reqs())
         st = eng.stats

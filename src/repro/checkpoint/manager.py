@@ -41,6 +41,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from ..obs import Obs
+
 
 class CheckpointError(RuntimeError):
     """A checkpoint operation failed: an async save raised (surfaced on
@@ -196,11 +198,29 @@ class CheckpointManager:
     """
 
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
-                 faults=None):
+                 faults=None, obs: Optional[Obs] = None):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
         self.faults = faults  # runtime.faults.FaultPlan (ckpt.* points)
+        # durations observed from the async thread ride the registry's
+        # lock; ckpt.save spans record on the thread that runs the save
+        self.obs = obs if obs is not None else Obs()
+        if faults is not None and getattr(faults, "obs", None) is None:
+            faults.obs = self.obs
+        self._m_save_s = self.obs.histogram(
+            "ckpt_save_seconds", "wall-clock per checkpoint save")
+        self._m_restore_s = self.obs.histogram(
+            "ckpt_restore_seconds", "wall-clock per checkpoint restore")
+        self._m_saves = self.obs.counter(
+            "ckpt_saves_total", "published checkpoints")
+        self._m_save_fail = self.obs.counter(
+            "ckpt_save_failures_total", "saves that raised")
+        self._m_restores = self.obs.counter(
+            "ckpt_restores_total", "successful restores")
+        self._m_crc_fail = self.obs.counter(
+            "ckpt_checksum_failures_total",
+            "restores rejected on a leaf crc32 mismatch")
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[tuple] = None  # (step, exception)
         os.makedirs(directory, exist_ok=True)
@@ -228,13 +248,23 @@ class CheckpointManager:
         )
 
         def _work():
-            if self.faults is not None:
-                self.faults.raise_if("ckpt.save")
-            path = save_checkpoint(self.directory, step, tree, metadata)
-            self._rotate()
-            if self.faults is not None and \
-                    self.faults.hit("ckpt.corrupt") is not None:
-                _corrupt_leaf(path)
+            try:
+                with self.obs.span("ckpt.save", step=step):
+                    t0 = time.perf_counter()
+                    if self.faults is not None:
+                        self.faults.raise_if("ckpt.save")
+                    path = save_checkpoint(
+                        self.directory, step, tree, metadata
+                    )
+                    self._rotate()
+                    if self.faults is not None and \
+                            self.faults.hit("ckpt.corrupt") is not None:
+                        _corrupt_leaf(path)
+            except Exception:
+                self._m_save_fail.inc()
+                raise
+            self._m_saves.inc()
+            self._m_save_s.observe(time.perf_counter() - t0)
 
         if self.async_save and not block:
 
@@ -256,9 +286,19 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def restore(self, template, shardings=None, step=None):
-        return restore_checkpoint(
-            self.directory, template, step=step, shardings=shardings
-        )
+        t0 = time.perf_counter()
+        try:
+            with self.obs.span("ckpt.restore", step=step):
+                out = restore_checkpoint(
+                    self.directory, template, step=step, shardings=shardings
+                )
+        except CheckpointError as e:
+            if "checksum mismatch" in str(e):
+                self._m_crc_fail.inc()
+            raise
+        self._m_restores.inc()
+        self._m_restore_s.observe(time.perf_counter() - t0)
+        return out
 
     def latest_step(self):
         return latest_step(self.directory)

@@ -50,6 +50,7 @@ from ..configs import get_config  # noqa: E402
 from ..distributed import sharding as shd  # noqa: E402
 from ..models import lm  # noqa: E402
 from ..models.param import init_params  # noqa: E402
+from ..obs import JsonlSink, Obs, write_metrics  # noqa: E402
 from ..runtime.faults import FaultPlan, parse_fault  # noqa: E402
 from ..serving import Engine, GenRequest, SamplingConfig, SpecConfig  # noqa: E402
 from .mesh import make_mesh, mesh_summary  # noqa: E402
@@ -90,6 +91,13 @@ def main(argv=None):
                     metavar="POINT[@AT[+]][:ARG]",
                     help="schedule a deterministic fault "
                          "(runtime.faults catalog; repeatable)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the final metrics registry snapshot "
+                         "(repro.obs.metrics/v1 JSON) on exit")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="stream span/event records (repro.obs.events/v1 "
+                         "JSONL) for the measured run — request "
+                         "lifecycles, decode blocks, fired faults")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced, mixer=args.mixer)
@@ -108,6 +116,7 @@ def main(argv=None):
                 k=args.spec_k, drafter=args.spec,
                 draft_arch=args.draft_arch, draft_reduced=args.reduced,
             )
+        obs = Obs()
         engine = Engine(
             cfg, params,
             slots=args.slots,
@@ -120,6 +129,7 @@ def main(argv=None):
             seed=args.seed,
             mesh=mesh,
             spec=spec,
+            obs=obs,
         )
         requests = [
             GenRequest(
@@ -135,14 +145,14 @@ def main(argv=None):
         engine.run([GenRequest(
             rid=-1, prompt=requests[0].prompt, max_new=args.block,
         )])
-        engine.stats.update(
-            prefill_s=0.0, decode_s=0.0, prompt_tokens=0,
-            generated_tokens=0, ttft_s=[], spec_rounds=0, spec_drafted=0,
-            spec_accepted=0, spec_replays=0,
-            errors=0, timeouts=0, cancelled=0, quarantined=0,
-            breaker_trips=0,
-        )
+        # fresh obs epoch: zero every metric series and drop warmup
+        # events, so the artifacts below describe only measured traffic
+        engine.obs.reset()
         engine.reset_breaker()  # warmup zero-acceptance must not leak
+        sink = None
+        if args.events_out:
+            sink = JsonlSink(args.events_out)
+            engine.obs.attach(sink)
         # attach the fault plan AFTER the warmup run so injection-point
         # hit counts start at the measured traffic, not at trace time
         if args.inject:
@@ -156,12 +166,14 @@ def main(argv=None):
         # decode-block tokens against decode wall time
         # (non-ok results may have produced no tokens at all)
         decode_toks = max(gen - len(results), 0)
-        ttft_ms = 1e3 * float(np.mean(st["ttft_s"])) if st["ttft_s"] else 0.0
+        ttft = engine.obs.registry.get("serving_ttft_seconds")
+        p50 = ttft.quantile(0.5) or 0.0
+        p99 = ttft.quantile(0.99) or 0.0
         decode_tps = decode_toks / st["decode_s"] if st["decode_s"] else 0.0
         print(
             f"[serve] {len(results)} requests, {gen} generated tokens in "
-            f"{dt:.2f}s | TTFT {ttft_ms:.1f}ms mean | "
-            f"decode {decode_tps:.1f} tok/s | "
+            f"{dt:.2f}s | TTFT p50 {1e3 * p50:.1f}ms p99 {1e3 * p99:.1f}ms "
+            f"| decode {decode_tps:.1f} tok/s | "
             f"prefill {st['prompt_tokens']/max(st['prefill_s'],1e-9):.1f} tok/s"
         )
         if spec is not None:
@@ -182,6 +194,12 @@ def main(argv=None):
             f"quarantined={st['quarantined']} "
             f"breaker_trips={st['breaker_trips']}"
         )
+        if sink is not None:
+            sink.close()
+            print(f"[serve] events -> {args.events_out}")
+        if args.metrics_out:
+            write_metrics(engine.obs.snapshot(), args.metrics_out)
+            print(f"[serve] metrics -> {args.metrics_out}")
     return len(results)
 
 

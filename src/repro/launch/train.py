@@ -30,6 +30,7 @@ from ..data.pipeline import DataConfig, SyntheticStream  # noqa: E402
 from ..distributed import sharding as shd  # noqa: E402
 from ..distributed import steps as steps_mod  # noqa: E402
 from ..models.param import init_params  # noqa: E402
+from ..obs import JsonlSink, Obs, write_metrics  # noqa: E402
 from ..optim import adamw  # noqa: E402
 from ..runtime.faults import FaultPlan, FaultSpec  # noqa: E402
 from ..runtime.ft import FaultTolerantLoop  # noqa: E402
@@ -54,6 +55,13 @@ def main(argv=None):
                     help="inject a train.step fault at this step "
                          "(runtime.faults; exercises restart/resume)")
     ap.add_argument("--metrics", default=None)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the final metrics registry snapshot "
+                         "(repro.obs.metrics/v1 JSON) on exit")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="stream span/event records (repro.obs.events/v1 "
+                         "JSONL): train.step spans, ckpt.save spans, "
+                         "resume events, fired faults")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced, mixer=args.mixer)
@@ -97,13 +105,33 @@ def main(argv=None):
         faults = None
         if args.fail_at_step is not None:
             faults = FaultPlan(FaultSpec("train.step", at=args.fail_at_step))
+        obs = Obs()
+        sink = None
+        if args.events_out:
+            sink = JsonlSink(args.events_out)
+            obs.attach(sink)
         loop = FaultTolerantLoop(
             step_fn, stream, args.ckpt_dir, ckpt_every=args.ckpt_every,
             metrics_path=args.metrics, faults=faults,
-            place_batch=place,
+            place_batch=place, obs=obs,
         )
         params, opt_state, last = loop.run(params, opt_state, args.steps)
-    print(f"[train] finished at step {last}")
+    step_s = obs.registry.get("train_step_seconds")
+    p50 = step_s.quantile(0.5) or 0.0
+    p99 = step_s.quantile(0.99) or 0.0
+    toks = obs.registry.get("train_tokens_total").total()
+    total_s = step_s.sum() or 1e-9
+    print(
+        f"[train] finished at step {last} | step p50 {p50:.3f}s "
+        f"p99 {p99:.3f}s | {toks / total_s:.0f} tok/s | "
+        f"loss {obs.registry.get('train_loss').value():.4f}"
+    )
+    if sink is not None:
+        sink.close()
+        print(f"[train] events -> {args.events_out}")
+    if args.metrics_out:
+        write_metrics(obs.snapshot(), args.metrics_out)
+        print(f"[train] metrics -> {args.metrics_out}")
     return last
 
 

@@ -119,9 +119,15 @@ class FaultPlan:
     that fires at it (or None).  ``fired`` counts fires per point for
     test assertions.  Hitting (or scheduling) an unregistered point is a
     ``ValueError`` — typos fail loudly on both sides of the contract.
+
+    When a component binds its ``obs`` bundle onto the plan (the engine
+    and the training loop both do), every firing self-documents as a
+    ``fault.fired`` event and a ``faults_fired_total{point=...}``
+    counter — a chaos run's event log shows exactly which injections
+    interleaved with which request lifecycles.
     """
 
-    def __init__(self, *specs: FaultSpec):
+    def __init__(self, *specs: FaultSpec, obs=None):
         self._by_point: Dict[str, List[FaultSpec]] = {}
         for spec in specs:
             if not isinstance(spec, FaultSpec):
@@ -129,6 +135,7 @@ class FaultPlan:
             self._by_point.setdefault(spec.point, []).append(spec)
         self._hits: collections.Counter = collections.Counter()
         self.fired: collections.Counter = collections.Counter()
+        self.obs = obs  # bound lazily by the consuming component
 
     def hit(self, point: str) -> Optional[FaultSpec]:
         if point not in FAULT_POINTS:
@@ -141,6 +148,12 @@ class FaultPlan:
         for spec in self._by_point.get(point, ()):
             if spec.covers(i):
                 self.fired[point] += 1
+                if self.obs is not None:
+                    self.obs.event("fault.fired", point=point, hit=i,
+                                   arg=spec.arg)
+                    self.obs.counter(
+                        "faults_fired_total", "fired fault injections"
+                    ).inc(point=point)
                 return spec
         return None
 

@@ -30,8 +30,10 @@ import time
 from typing import Callable, Optional
 
 import jax
+import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
+from ..obs import Obs
 from .faults import FaultPlan
 
 
@@ -88,11 +90,28 @@ class FaultTolerantLoop:
         faults: Optional[FaultPlan] = None,
         log=print,
         place_batch: Optional[Callable] = None,
+        obs: Optional[Obs] = None,
     ):
         self.train_step = train_step
         self.data = data_stream
         self.faults = faults
-        self.manager = CheckpointManager(ckpt_dir, keep=keep, faults=faults)
+        # one obs bundle threads through the whole training stack: the
+        # loop, its checkpoint manager, and the fault plan all report
+        # into the same registry/tracer (DESIGN.md §13)
+        self.obs = obs if obs is not None else Obs()
+        if faults is not None and faults.obs is None:
+            faults.obs = self.obs
+        self.manager = CheckpointManager(ckpt_dir, keep=keep, faults=faults,
+                                         obs=self.obs)
+        self._m_step_s = self.obs.histogram(
+            "train_step_seconds", "wall-clock per optimizer step")
+        self._m_steps = self.obs.counter(
+            "train_steps_total", "completed optimizer steps")
+        self._m_tokens = self.obs.counter(
+            "train_tokens_total", "tokens consumed by completed steps")
+        self._m_loss = self.obs.gauge("train_loss", "last step's loss")
+        self._m_restarts = self.obs.counter(
+            "train_restarts_total", "checkpoint auto-resumes on entry")
         self.ckpt_every = ckpt_every
         self.metrics_path = metrics_path
         self.log = log
@@ -120,6 +139,8 @@ class FaultTolerantLoop:
                 (params, opt_state)
             )
             start = manifest["step"] + 1
+            self._m_restarts.inc()
+            self.obs.event("train.resumed", step=manifest["step"])
             self.log(f"[ft] resumed from step {manifest['step']}")
 
         mf = open(self.metrics_path, "a") if self.metrics_path else None
@@ -131,17 +152,30 @@ class FaultTolerantLoop:
                 # FaultSpec(at=N) means "the Nth step THIS process runs"
                 if self.faults is not None:
                     self.faults.raise_if("train.step")
-                batch = self.place_batch(self.data.batch(step))
+                host_batch = self.data.batch(step)
+                batch = self.place_batch(host_batch)
                 self.watchdog.arm(step)
                 t0 = time.time()
-                params, opt_state, metrics = self.train_step(
-                    params, opt_state, batch
-                )
-                metrics = {
-                    k: float(v) for k, v in jax.device_get(metrics).items()
-                }
+                # the span closes on the device_get the loop already
+                # performs to read the step's metrics — no extra sync
+                with self.obs.span("train.step", step=step):
+                    params, opt_state, metrics = self.train_step(
+                        params, opt_state, batch
+                    )
+                    metrics = {
+                        k: float(v)
+                        for k, v in jax.device_get(metrics).items()
+                    }
                 dt = time.time() - t0
                 self.watchdog.observe(step, dt)
+                self._m_step_s.observe(dt)
+                self._m_steps.inc()
+                if isinstance(host_batch, dict) and "tokens" in host_batch:
+                    self._m_tokens.inc(
+                        int(np.asarray(host_batch["tokens"]).size)
+                    )
+                if "loss" in metrics:
+                    self._m_loss.set(metrics["loss"])
                 metrics.update(step=step, step_time_s=round(dt, 4))
                 if mf:
                     mf.write(json.dumps(metrics) + "\n")

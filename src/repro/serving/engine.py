@@ -53,6 +53,7 @@ concern (the HLA family is the paper's point).
 from __future__ import annotations
 
 import collections
+import collections.abc
 import contextlib
 import dataclasses
 import math
@@ -64,15 +65,87 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import lm, seq_op
+from ..obs import Obs
 from ..runtime.faults import FaultPlan
 from .sampling import SamplingConfig, sample
 from .spec import SpecConfig, build_drafter
 from .spec.verify import make_spec_round
 from .state_pool import StatePool, tree_finite
 
-#: GenResult.status values -> the stats counter each increments.
-_STATUS_COUNTERS = {"error": "errors", "timeout": "timeouts",
-                    "cancelled": "cancelled"}
+#: legacy ``Engine.stats`` keys -> unlabeled registry counters
+_STATS_COUNTERS = {
+    "prefill_s": "serving_prefill_seconds_total",
+    "decode_s": "serving_decode_seconds_total",
+    "prompt_tokens": "serving_prompt_tokens_total",
+    "generated_tokens": "serving_generated_tokens_total",
+    "spec_rounds": "serving_spec_rounds_total",
+    "spec_drafted": "serving_spec_drafted_total",
+    "spec_accepted": "serving_spec_accepted_total",
+    "spec_replays": "serving_spec_replay_rounds_total",
+    "quarantined": "serving_quarantined_total",
+    "breaker_trips": "serving_breaker_trips_total",
+}
+#: legacy keys that were request-status tallies -> the status label on
+#: ``serving_requests_total``
+_STATS_STATUS = {"errors": "error", "timeouts": "timeout",
+                 "cancelled": "cancelled"}
+#: legacy keys holding float seconds (everything else was an int count)
+_STATS_FLOAT = frozenset(("prefill_s", "decode_s"))
+
+
+class _StatsShim(collections.abc.MutableMapping):
+    """DEPRECATED dict view of the engine's metrics (DESIGN.md §13).
+
+    The old ad-hoc ``Engine.stats`` dict is now backed by the obs
+    registry: reads compute from the live metric series, writes forward
+    to them (``stats.update(decode_s=0.0, ...)`` resets, as the old
+    warmup code relied on).  ``stats["ttft_s"]`` returns the TTFT
+    histogram's BOUNDED recent-sample reservoir, not an unbounded list —
+    under sustained traffic it holds the newest ``sample_cap`` values.
+    New code should use ``engine.obs`` directly.
+    """
+
+    def __init__(self, obs: Obs):
+        self._obs = obs
+
+    def _keys(self):
+        return list(_STATS_COUNTERS) + list(_STATS_STATUS) + ["ttft_s"]
+
+    def __getitem__(self, key):
+        if key == "ttft_s":
+            return self._obs.registry.get("serving_ttft_seconds").recent()
+        if key in _STATS_STATUS:
+            return int(self._obs.registry.get("serving_requests_total")
+                       .value(status=_STATS_STATUS[key]))
+        name = _STATS_COUNTERS[key]
+        total = self._obs.registry.get(name).total()
+        return total if key in _STATS_FLOAT else int(total)
+
+    def __setitem__(self, key, value):
+        if key == "ttft_s":
+            hist = self._obs.registry.get("serving_ttft_seconds")
+            hist.reset()
+            for v in value:
+                hist.observe(float(v))
+            return
+        if key in _STATS_STATUS:
+            self._obs.registry.get("serving_requests_total")._set(
+                float(value), status=_STATS_STATUS[key]
+            )
+            return
+        self._obs.registry.get(_STATS_COUNTERS[key])._set(float(value))
+
+    def __delitem__(self, key):
+        raise TypeError("Engine.stats keys are fixed")
+
+    def __iter__(self):
+        return iter(self._keys())
+
+    def __len__(self):
+        return len(self._keys())
+
+    def __repr__(self):
+        return f"EngineStats({dict(self)})"
 
 
 @dataclasses.dataclass
@@ -119,6 +192,7 @@ class Engine:
         mesh=None,
         spec: Optional[SpecConfig] = None,
         faults: Optional[FaultPlan] = None,
+        obs: Optional[Obs] = None,
     ):
         # serveability is a REGISTRY capability, not a hardcoded tuple:
         # any op registered with streaming=True (O(1) decode state) admits
@@ -180,14 +254,47 @@ class Engine:
         # blocks, counting down cooldown) -> half_open (one probe round)
         self.breaker = {"state": "closed", "cooldown": 0, "zero_rounds": 0,
                         "reason": None}
-        self.stats = {
-            "prefill_s": 0.0, "decode_s": 0.0,
-            "prompt_tokens": 0, "generated_tokens": 0, "ttft_s": [],
-            "spec_rounds": 0, "spec_drafted": 0, "spec_accepted": 0,
-            "spec_replays": 0,
-            "errors": 0, "timeouts": 0, "cancelled": 0,
-            "quarantined": 0, "breaker_trips": 0,
-        }
+        # observability (DESIGN.md §13): every number the engine reports
+        # goes through one registry + tracer bundle.  All timings are
+        # host wall-clock taken at syncs the engine already performs
+        # (admission TTFT fetch, the once-per-block token transfer) — the
+        # obs layer never adds a device round trip.
+        self.obs = obs if obs is not None else Obs()
+        m = self.obs
+        self._m_ttft = m.histogram(
+            "serving_ttft_seconds", "admission -> first sampled token")
+        self._m_itl = m.histogram(
+            "serving_inter_token_seconds",
+            "decode block wall-clock / tokens stepped (one observation "
+            "per block/round — never per-token host timing)")
+        self._m_prefill_s = m.counter(
+            "serving_prefill_seconds_total", "wall-clock in admissions")
+        self._m_decode_s = m.counter(
+            "serving_decode_seconds_total",
+            "wall-clock in decode blocks / spec rounds")
+        self._m_prompt_toks = m.counter(
+            "serving_prompt_tokens_total", "prompt tokens prefilled")
+        self._m_gen_toks = m.counter(
+            "serving_generated_tokens_total", "tokens in terminal streams")
+        self._m_requests = m.counter(
+            "serving_requests_total", "terminal results by status label")
+        self._m_quarantined = m.counter(
+            "serving_quarantined_total", "slots reset on non-finite state")
+        self._m_breaker = m.counter(
+            "serving_breaker_trips_total", "spec -> plain breaker trips")
+        self._m_spec_rounds = m.counter(
+            "serving_spec_rounds_total", "completed speculative rounds")
+        self._m_spec_drafted = m.counter(
+            "serving_spec_drafted_total", "draft tokens proposed")
+        self._m_spec_accepted = m.counter(
+            "serving_spec_accepted_total", "draft tokens accepted")
+        self._m_spec_replays = m.counter(
+            "serving_spec_replay_rounds_total", "rounds with a rollback")
+        self._m_queue = m.gauge(
+            "serving_queue_depth", "requests waiting for a slot")
+        self._m_slots = m.gauge(
+            "serving_slots_active", "slots currently decoding")
+        self.stats = _StatsShim(self.obs)  # legacy dict view (DEPRECATED)
 
         pool = self.pool
 
@@ -273,13 +380,20 @@ class Engine:
 
     # -- fault injection ----------------------------------------------------
 
+    def _bind_faults(self) -> Optional[FaultPlan]:
+        """Fired injections self-document through the engine's tracer
+        (the plan may be attached after construction, e.g. post-warmup)."""
+        if self.faults is not None and self.faults.obs is None:
+            self.faults.obs = self.obs
+        return self.faults
+
     def _raise_fault(self, point: str) -> None:
-        if self.faults is not None:
+        if self._bind_faults() is not None:
             self.faults.raise_if(point)
 
     def _inject_block_faults(self) -> None:
         """Hit the once-per-block injection points (no-ops without a plan)."""
-        if self.faults is None:
+        if self._bind_faults() is None:
             return
         slow = self.faults.hit("engine.slow_block")
         if slow is not None:
@@ -349,18 +463,21 @@ class Engine:
                 f"(engine={self.sampling}, request={scfg})"
             )
         t0 = time.perf_counter()
-        self._raise_fault("engine.prefill")
-        self.key, sub = jax.random.split(self.key)
-        prompt = jnp.asarray(prompt_np[None])
-        with self._mesh_ctx():
-            first, state1, finite = self._prefill(
-                self.params, prompt, sub, scfg
-            )
-            self.pool.write_slot(slot, state1)
-        # one sync per admission (TTFT endpoint); the health flag rides it
-        first_host, finite_host = jax.device_get((first[0], finite))
+        with self.obs.span("engine.prefill", rid=req.rid, slot=slot,
+                           prompt_len=len(prompt_np)):
+            self._raise_fault("engine.prefill")
+            self.key, sub = jax.random.split(self.key)
+            prompt = jnp.asarray(prompt_np[None])
+            with self._mesh_ctx():
+                first, state1, finite = self._prefill(
+                    self.params, prompt, sub, scfg
+                )
+                self.pool.write_slot(slot, state1)
+            # one sync per admission (TTFT endpoint); the health flag
+            # rides it — the span closes right after this existing sync
+            first_host, finite_host = jax.device_get((first[0], finite))
         if not bool(finite_host):
-            self.stats["quarantined"] += 1
+            self._m_quarantined.inc()
             self.pool.reset_slot(slot)
             raise RuntimeError(
                 f"request {req.rid}: admission prefill produced a "
@@ -380,9 +497,14 @@ class Engine:
             t_start + req.deadline_s if req.deadline_s is not None
             else math.inf
         )
-        self.stats["prefill_s"] += ttft
-        self.stats["prompt_tokens"] += len(prompt_np)
-        self.stats["ttft_s"].append(ttft)
+        self._m_prefill_s.inc(ttft)
+        self._m_prompt_toks.inc(len(prompt_np))
+        self._m_ttft.observe(ttft)
+        self._m_slots.set(float(self.active.sum()))
+        self.obs.event("request.admitted", rid=req.rid, slot=slot,
+                       prompt_len=len(prompt_np))
+        self.obs.event("request.first_token", rid=req.rid,
+                       ttft_s=round(ttft, 6))
         # the admission token goes through the ONE commit path, so a
         # first-token EOS or max_new=1 finishes here instead of wasting a
         # full decode block on an already-complete request
@@ -428,10 +550,13 @@ class Engine:
             rid=req.rid, tokens=out, ttft_s=self._slot_ttft[slot],
             prompt_len=len(req.prompt), status=status, error=error,
         )
-        if status in _STATUS_COUNTERS:
-            self.stats[_STATUS_COUNTERS[status]] += 1
-        self.stats["generated_tokens"] += len(out)
+        self._m_requests.inc(status=status)
+        self._m_gen_toks.inc(len(out))
+        self.obs.event("request.done", rid=req.rid, status=status,
+                       tokens=len(out),
+                       ttft_s=round(self._slot_ttft[slot], 6))
         self.active[slot] = False
+        self._m_slots.set(float(self.active.sum()))
         self._slot_req[slot] = None
         self._slot_deadline[slot] = math.inf
         # drop any per-request sampling override so the freed slot stops
@@ -449,15 +574,16 @@ class Engine:
             prompt_len=len(np.atleast_1d(np.asarray(req.prompt))),
             status=status, error=error,
         )
-        if status in _STATUS_COUNTERS:
-            self.stats[_STATUS_COUNTERS[status]] += 1
+        self._m_requests.inc(status=status)
+        self.obs.event("request.done", rid=req.rid, status=status,
+                       tokens=0, ttft_s=0.0)
 
     def _quarantine(self, slot: int) -> None:
         """A slot's state went non-finite: reset the state (O(state), one
         scatter — untouched neighbours keep decoding) and fail only that
         request.  The paper's constant-size state is what makes this the
         cheap path: recovery never reconstructs a KV arena."""
-        self.stats["quarantined"] += 1
+        self._m_quarantined.inc()
         self.pool.reset_slot(slot)
         self._finish(
             slot, status="error",
@@ -507,7 +633,8 @@ class Engine:
                     if self.spec is not None else 0)
         self.breaker.update(state="open", cooldown=cooldown,
                             zero_rounds=0, reason=reason)
-        self.stats["breaker_trips"] += 1
+        self._m_breaker.inc()
+        self.obs.event("breaker.tripped", reason=reason)
 
     def reset_breaker(self) -> None:
         """Re-close the breaker for a fresh traffic epoch.  Benchmarks and
@@ -599,17 +726,24 @@ class Engine:
         uniq = tuple(sorted(set(self._slot_scfg), key=repr))
         sel = jnp.asarray([uniq.index(c) for c in self._slot_scfg])
         t0 = time.perf_counter()
-        with self._mesh_ctx():
-            states, tok, pos, toks, finite = self._decode_block(
-                self.params, self.pool.states, self.tokens, self.positions,
-                active_dev, sub, sel, n_steps=n_steps, scfgs=uniq,
-            )
-        self.pool.states = states
-        self.tokens, self.positions = tok, pos
-        # the block sync: tokens + quarantine flags in ONE transfer
-        toks_host, finite_host = jax.device_get((toks, finite))
+        with self.obs.span("engine.decode_block", steps=n_steps,
+                           slots_active=int(self.active.sum())):
+            with self._mesh_ctx():
+                states, tok, pos, toks, finite = self._decode_block(
+                    self.params, self.pool.states, self.tokens,
+                    self.positions, active_dev, sub, sel, n_steps=n_steps,
+                    scfgs=uniq,
+                )
+            self.pool.states = states
+            self.tokens, self.positions = tok, pos
+            # the block sync: tokens + quarantine flags in ONE transfer —
+            # the span (and the timing below) closes on this existing
+            # sync, never adding one
+            toks_host, finite_host = jax.device_get((toks, finite))
         toks_host = np.asarray(toks_host)
-        self.stats["decode_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._m_decode_s.inc(dt)
+        self._m_itl.observe(dt / n_steps)
         for s in range(self.pool.slots):
             if not self.active[s]:
                 continue
@@ -647,6 +781,10 @@ class Engine:
         if not slots_active:
             return False, 0
         t0 = time.perf_counter()
+        # manual span: a propose-phase crash propagates to the breaker
+        # before the round completes, so only completed rounds record
+        timer = self.obs.timer("engine.spec_round", k=k,
+                               slots_active=len(slots_active))
         self._raise_fault("drafter.propose")
         drafts, qp = self.drafter.propose(slots_active, k)
         if self.drafter.full_width:
@@ -685,20 +823,22 @@ class Engine:
         # ONE host transfer per round: commits + quarantine flags together
         packed_h, finite_h = jax.device_get((packed, finite))
         packed_h = np.asarray(packed_h)
-        self.stats["spec_rounds"] += 1
+        self._m_spec_rounds.inc()
         healthy = [s for s in slots_active if bool(finite_h[s])]
         if any(int(packed_h[s, 0]) < k for s in healthy):
-            self.stats["spec_replays"] += 1  # the rollback arm ran
+            self._m_spec_replays.inc()  # the rollback arm ran
         accepted_total = 0
+        stepped = 0  # tokens the round advanced (accepted + bonus)
         for s in slots_active:
             if not bool(finite_h[s]):
                 self._quarantine(s)
                 continue
             m = int(packed_h[s, 0])
             committed = [int(t) for t in packed_h[s, 1:m + 2]]
-            self.stats["spec_drafted"] += k
-            self.stats["spec_accepted"] += m
+            self._m_spec_drafted.inc(k)
+            self._m_spec_accepted.inc(m)
             accepted_total += m
+            stepped += m + 1
             if self._commit(s, committed):
                 continue  # finished: state is stale but the slot is free
             if self.breaker["state"] != "closed":
@@ -707,7 +847,9 @@ class Engine:
                 self.drafter.commit(s, committed)
             except Exception as e:
                 self._trip_breaker(f"drafter.commit failed: {e!r}")
-        self.stats["decode_s"] += time.perf_counter() - t0
+        dt = timer.close(accepted=accepted_total)
+        self._m_decode_s.inc(time.perf_counter() - t0)
+        self._m_itl.observe(dt / max(stepped, 1))
         return True, accepted_total
 
     # -- driver -------------------------------------------------------------
@@ -726,8 +868,10 @@ class Engine:
         now = time.perf_counter()
         for r in requests:
             self._enqueue_t.setdefault(r.rid, now)
+            self.obs.event("request.queued", rid=r.rid)
         pending = collections.deque(requests)
         while pending or self.active.any():
+            self._m_queue.set(float(len(pending)))
             for s in self.free_slots():
                 admitted = False
                 while pending and not admitted:
@@ -764,4 +908,5 @@ class Engine:
                                 s, status="error",
                                 error=f"decode block failed: {e!r}",
                             )
+        self._m_queue.set(0.0)
         return [self.results[r.rid] for r in requests]
