@@ -1,0 +1,4 @@
+"""Offline analysis of the lowered program: the loop-aware HLO parser
+(:mod:`repro.analysis.hlo_analysis`), the invariant linter
+(:mod:`repro.analysis.checks`), and the lower-only trace contracts
+(:mod:`repro.analysis.contracts`)."""

@@ -1,0 +1,11 @@
+"""Machine-checked repo invariants: the RPR rule set (DESIGN.md §14).
+
+``python -m repro.analysis.checks src/repro`` lints the tree; library
+use goes through :func:`run_checks`.  The compiled-artifact
+counterpart (lowered-HLO trace contracts) lives in
+``repro.analysis.contracts``.
+"""
+
+from .findings import Baseline, Finding, fingerprint, to_json  # noqa: F401
+from .rules import ALL_RULES, RULES_BY_CODE  # noqa: F401
+from .runner import collect_modules, make_baseline, run_checks  # noqa: F401

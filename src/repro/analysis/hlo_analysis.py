@@ -337,8 +337,32 @@ def analyze(text: str, details: bool = False):
     return out
 
 
+def main(argv=None) -> int:
+    """``python -m repro.analysis.hlo_analysis dump.hlo [--details]`` —
+    the loop-aware FLOPs/bytes/collectives account of a compiled module
+    (replaces the old ``benchmarks/hlo_analysis.py`` wrapper)."""
+    import argparse
+    import sys
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.hlo_analysis",
+        description="Loop-aware FLOPs/bytes/collective analysis of a "
+                    "compiled HLO text dump.",
+    )
+    p.add_argument("hlo", help="path to compiled HLO text "
+                               "(compiled.as_text()), or - for stdin")
+    p.add_argument("--details", action="store_true",
+                   help="include the per-op-kind bytes breakdown")
+    args = p.parse_args(argv)
+    text = sys.stdin.read() if args.hlo == "-" else open(args.hlo).read()
+    try:
+        print(json.dumps(analyze(text, details=args.details), indent=2))
+    except BrokenPipeError:  # `... | head` closed the pipe; not an error
+        sys.stderr.close()
+    return 0
+
+
 if __name__ == "__main__":
     import sys
 
-    with open(sys.argv[1]) as f:
-        print(json.dumps(analyze(f.read()), indent=2))
+    sys.exit(main())

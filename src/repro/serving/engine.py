@@ -475,7 +475,8 @@ class Engine:
                 self.pool.write_slot(slot, state1)
             # one sync per admission (TTFT endpoint); the health flag
             # rides it — the span closes right after this existing sync
-            first_host, finite_host = jax.device_get((first[0], finite))
+            first_host, finite_host = jax.device_get(
+                (first[0], finite))  # sync-point: admission TTFT endpoint
         if not bool(finite_host):
             self._m_quarantined.inc()
             self.pool.reset_slot(slot)
@@ -739,7 +740,8 @@ class Engine:
             # the block sync: tokens + quarantine flags in ONE transfer —
             # the span (and the timing below) closes on this existing
             # sync, never adding one
-            toks_host, finite_host = jax.device_get((toks, finite))
+            toks_host, finite_host = jax.device_get(
+                (toks, finite))  # sync-point: the once-per-block transfer
         toks_host = np.asarray(toks_host)
         dt = time.perf_counter() - t0
         self._m_decode_s.inc(dt)
@@ -821,7 +823,8 @@ class Engine:
         self.pool.states = new_states
         self.tokens, self.positions = new_tokens, new_positions
         # ONE host transfer per round: commits + quarantine flags together
-        packed_h, finite_h = jax.device_get((packed, finite))
+        packed_h, finite_h = jax.device_get(
+            (packed, finite))  # sync-point: one transfer per spec round
         packed_h = np.asarray(packed_h)
         self._m_spec_rounds.inc()
         healthy = [s for s in slots_active if bool(finite_h[s])]
