@@ -202,6 +202,89 @@ def render_ops():
     return "\n".join(out)
 
 
+def render_utilization():
+    """§Utilization from results/ops.json (benchmarks.run bench_ops):
+    achieved-vs-roofline for every registered SequenceOp — measured
+    tok/s x analytic whole-model FLOPs/token (repro.obs.costs) against
+    the device peak (repro.obs.perf.device_peak)."""
+    path = os.path.join(RESULTS, "ops.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    peak = r.get("peak")
+    if peak is None:  # pre-§15 ops.json artifact: no cost-model columns
+        return None
+    sh = r["shape"]
+    out = [
+        "\n### §Utilization — achieved vs roofline per SequenceOp "
+        f"(backend={r['backend']}, {sh['arch']}, B={sh['B']} n={sh['n']}; "
+        f"peak {peak['flops_per_s']/1e9:.0f} GFLOP/s / "
+        f"{peak['bytes_per_s']/1e9:.0f} GB/s, {peak['source']} "
+        f"[{peak['kind']}])\n",
+        "| op | train tok/s | train GFLOP/s | train util | decode tok/s "
+        "| decode GFLOP/s | decode util | state bytes |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for name, e in sorted(r["entries"].items()):
+        if "train_util" not in e:
+            continue
+        tf = e["train_fwd_tok_per_s"] * e["train_flops_per_token"] / 1e9
+        df = e["decode_tok_per_s"] * e["decode_flops_per_token"] / 1e9
+        out.append(
+            f"| {name} | {e['train_fwd_tok_per_s']:.0f} | {tf:.2f} | "
+            f"{100 * e['train_util']:.1f}% ({e['train_bound']}) | "
+            f"{e['decode_tok_per_s']:.0f} | {df:.2f} | "
+            f"{100 * e['decode_util']:.1f}% ({e['decode_bound']}) | "
+            f"{e['state_bytes']} |"
+        )
+    out.append(
+        "\n(utilization = achieved FLOP/s or GB/s over the binding "
+        "roofline resource; calibrated CPU ceilings are achievable-not-"
+        "peak, so treat CPU percentages as relative — compare on TPU. "
+        "The gap to 100% on non-fused ops is the fused-kernel ROADMAP "
+        "headroom.)"
+    )
+    return "\n".join(out)
+
+
+def render_trend(history_path):
+    """§Trend from a repro.obs.bench/v1 history: latest run vs the one
+    before it, through the perfcheck significance rule."""
+    if not history_path or not os.path.exists(history_path):
+        return None
+    from repro.obs.perf import read_bench
+    from repro.obs.perfcheck import compare_runs
+
+    runs = read_bench(history_path)
+    if len(runs) < 2:
+        return None
+    prev, last = runs[-2], runs[-1]
+    cmp = compare_runs(prev, last)
+    out = [
+        "\n### §Trend — latest bench run vs previous "
+        f"({prev['env'].get('git_sha')} -> {last['env'].get('git_sha')}, "
+        f"{len(cmp['compared'])} shared rows)\n",
+        "| row | previous | latest | ratio | trend |",
+        "|---|---|---|---|---|",
+    ]
+    for c in sorted(cmp["compared"], key=lambda c: c["name"]):
+        trend = ("**regressed**" if c["regressed"]
+                 else "improved" if c["improved"] else "~")
+        out.append(
+            f"| {c['name']} | {c['old']:.4g} {c['unit']} | "
+            f"{c['new']:.4g} {c['unit']} | x{c['ratio']:.2f} | {trend} |"
+        )
+    for name in cmp["only_new"]:
+        out.append(f"| {name} | — | new | | |")
+    out.append(
+        "\n(trend = the perfcheck significance rule: a move must clear "
+        "both the relative tolerance and the noise allowance from both "
+        "runs' IQRs; `~` is within noise.)"
+    )
+    return "\n".join(out)
+
+
 def render_distributed():
     """§Distributed table from results/distributed.json (benchmarks.run
     bench_distributed): per-device train tok/s, 1 -> 8 host devices."""
@@ -281,24 +364,24 @@ def render(rows):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--md", default=None)
+    ap.add_argument("--history", default=os.path.join(RESULTS,
+                                                      "history.jsonl"),
+                    help="repro.obs.bench/v1 history for the §Trend "
+                         "section (default results/history.jsonl)")
     args = ap.parse_args()
     rows = load_results()
     text = render(rows)
-    ts = render_train_step()
-    if ts:
-        text = text + "\n" + ts
-    sv = render_serving()
-    if sv:
-        text = text + "\n" + sv
-    sp = render_spec()
-    if sp:
-        text = text + "\n" + sp
-    op = render_ops()
-    if op:
-        text = text + "\n" + op
-    ds = render_distributed()
-    if ds:
-        text = text + "\n" + ds
+    for section in (
+        render_train_step(),
+        render_serving(),
+        render_spec(),
+        render_ops(),
+        render_utilization(),
+        render_trend(args.history),
+        render_distributed(),
+    ):
+        if section:
+            text = text + "\n" + section
     print(text)
     if args.md:
         with open(args.md, "w") as f:

@@ -1,7 +1,7 @@
 """Benchmark harness — one entry per paper table/figure + system benches.
 
-Prints ``name,us_per_call,derived`` CSV rows.  The paper is algorithmic
-(no empirical tables); its claims map to:
+Prints ``name,us_per_call,iqr_us,derived`` CSV rows.  The paper is
+algorithmic (no empirical tables); its claims map to:
 
 * Fig. 1/2 + Thms 3.1/4.1/6.1/7.1/7.2 — `equivalence` (views agree, and
   timing of each view);
@@ -9,13 +9,23 @@ Prints ``name,us_per_call,derived`` CSV rows.  The paper is algorithmic
   `statesize` (state bytes vs n, constant);
 * §4 chunk-parallel training — `chunkwidth` (throughput vs w), and
   `train_step` (fwd+bwd us/step: fused Pallas VJP with chunk-state
-  checkpointing vs recompute-in-backward vs jnp reference; persisted to
-  ``results/train_step.json`` for `benchmarks.report`);
+  checkpointing vs recompute-in-backward vs jnp reference);
 * serving (continuous batching over the paper's O(1)-state decode) —
-  `serving` (TTFT + steady-state decode tok/s from the state-pool engine;
-  persisted to ``results/serving.json``);
+  `serving` (TTFT + steady-state decode tok/s from the state-pool engine);
 * the multi-pod roofline table is produced by `benchmarks.roofline`
   (separate long-running driver) and summarized by `benchmarks.report`.
+
+Measurement discipline (DESIGN.md §15): every timing is **adaptive** —
+samples accumulate until a minimum measured wall time — and reported as
+median + IQR, so run-to-run comparisons have a noise scale attached.
+Every bench persists ``results/<name>.json`` through ONE shared writer
+(`write_results`) stamping the schema version and env fingerprint, and
+throughput/latency rows append to the ``repro.obs.bench/v1`` history
+(``--history``) consumed by ``python -m repro.obs.perfcheck`` — the CI
+regression gate.  ``bench_ops`` additionally computes achieved-vs-
+roofline utilization per registered SequenceOp from the analytic cost
+model (``repro.obs.costs``), rendered as §Utilization by
+``benchmarks.report``.
 """
 
 from __future__ import annotations
@@ -23,21 +33,98 @@ from __future__ import annotations
 import json
 import os
 import time
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+RESULTS_SCHEMA = "repro.bench.results/v1"
+
+# adaptive-timing knobs: sample until this much measured time (or the
+# iteration cap, whichever first) — overridable for CI smoke runs
+MIN_MEASURE_S = float(os.environ.get("BENCH_MIN_MEASURE_S", "0.2"))
+MAX_TIME_ITERS = int(os.environ.get("BENCH_MAX_ITERS", "64"))
+MIN_TIME_ITERS = 3
 
 
-def _timeit(fn, *args, iters=5, warmup=2):
+class Timing(NamedTuple):
+    us: float      # median us per call
+    iqr_us: float  # inter-quartile range of the per-call samples, us
+    iters: int     # samples actually taken
+
+
+def _stats(samples) -> Timing:
+    q25, q75 = np.percentile(samples, [25, 75])
+    return Timing(float(np.median(samples) * 1e6),
+                  float((q75 - q25) * 1e6), len(samples))
+
+
+def _timeit(fn, *args, warmup=2, min_time_s=None) -> Timing:
+    """Adaptive timing: block-until-ready per call, accumulate samples
+    until ``min_time_s`` of measured time (>= MIN_TIME_ITERS, <=
+    MAX_TIME_ITERS samples), report median + IQR."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
+    budget = MIN_MEASURE_S if min_time_s is None else min_time_s
+    samples, total = [], 0.0
+    while len(samples) < MIN_TIME_ITERS or (
+        total < budget and len(samples) < MAX_TIME_ITERS
+    ):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        dt = time.perf_counter() - t0
+        samples.append(dt)
+        total += dt
+    return _stats(samples)
+
+
+def write_results(name: str, payload: dict) -> str:
+    """THE results persistence path: every bench table lands in
+    ``results/<name>.json`` with the schema version and env fingerprint
+    stamped, so any two artifacts are comparable (and
+    ``benchmarks.report`` / ad-hoc tooling parse one format)."""
+    from repro.obs.perf import env_fingerprint
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    doc = {"schema": RESULTS_SCHEMA, "bench": name,
+           "env": env_fingerprint()}
+    doc.update(payload)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+class RowSink(list):
+    """The ``rows`` list benches append ``(name, us, iqr_us, derived)``
+    to, plus a side-channel for named throughput/latency metrics bound
+    for the bench history (tok/s rows carry direction="higher" there —
+    the regression gate must know which way is good)."""
+
+    def __init__(self):
+        super().__init__()
+        self.metrics = []
+
+    def metric(self, name, value, *, unit, direction, dispersion=0.0):
+        self.metrics.append({
+            "name": name, "value": float(value), "unit": unit,
+            "direction": direction, "dispersion": float(dispersion),
+        })
+
+
+def _metric(rows, name, value, **kw):
+    """Record a history metric if ``rows`` is a RowSink (no-op for the
+    plain lists tests may pass)."""
+    m = getattr(rows, "metric", None)
+    if m is not None:
+        m(name, value, **kw)
+
+
+def _tps_disp(tok_per_s, t: Timing) -> float:
+    """Propagate a timing IQR into tok/s units (first-order)."""
+    return tok_per_s * t.iqr_us / max(t.us, 1e-9)
 
 
 def _mk(rng, B, H, n, d):
@@ -64,10 +151,18 @@ def bench_equivalence(rows):
         "hla2_scan": jax.jit(lambda *a: hla2_scan(*a)[0]),
         "hla2_chunkwise": jax.jit(lambda *a: hla2_chunkwise(*a, chunk=64)[0]),
     }
+    entries = {}
     for name, fn in impls.items():
         err = float(jnp.max(jnp.abs(fn(q, k, v, g) - o_ref)))
-        us = _timeit(fn, q, k, v, g)
-        rows.append((f"equivalence/{name}", us, f"max_err={err:.2e}"))
+        t = _timeit(fn, q, k, v, g)
+        rows.append((f"equivalence/{name}", t.us, t.iqr_us,
+                     f"max_err={err:.2e}"))
+        entries[name] = {"us": round(t.us, 1), "iqr_us": round(t.iqr_us, 1),
+                         "iters": t.iters, "max_err": err}
+    write_results("equivalence", {
+        "shape": {"B": 2, "H": 2, "n": 256, "d": 32, "chunk": 64},
+        "entries": entries,
+    })
 
 
 def bench_complexity(rows):
@@ -78,20 +173,36 @@ def bench_complexity(rows):
     chunked = jax.jit(lambda a, b, c: hla2_chunkwise(a, b, c, chunk=64)[0])
     naive = jax.jit(lambda a, b, c: hla2_naive(a, b, c))
     per_tok = {}
+    entries = {}
     for n in (256, 512, 1024, 2048):
         q, k, v, _ = _mk(rng, 1, 2, n, 32)
-        us = _timeit(chunked, q, k, v, iters=3)
-        per_tok[n] = us / n
-        rows.append((f"complexity/hla2_chunk_n{n}", us, f"us_per_tok={us/n:.2f}"))
+        t = _timeit(chunked, q, k, v)
+        per_tok[n] = t.us / n
+        rows.append((f"complexity/hla2_chunk_n{n}", t.us, t.iqr_us,
+                     f"us_per_tok={t.us/n:.2f}"))
+        entries[f"hla2_chunk_n{n}"] = {
+            "us": round(t.us, 1), "iqr_us": round(t.iqr_us, 1),
+            "us_per_tok": round(t.us / n, 3),
+        }
     for n in (256, 512, 1024):
         q, k, v, _ = _mk(rng, 1, 2, n, 32)
-        us = _timeit(naive, q, k, v, iters=3)
-        rows.append((f"complexity/naive_n{n}", us, f"us_per_tok={us/n:.2f}"))
+        t = _timeit(naive, q, k, v)
+        rows.append((f"complexity/naive_n{n}", t.us, t.iqr_us,
+                     f"us_per_tok={t.us/n:.2f}"))
+        entries[f"naive_n{n}"] = {
+            "us": round(t.us, 1), "iqr_us": round(t.iqr_us, 1),
+            "us_per_tok": round(t.us / n, 3),
+        }
     growth = per_tok[2048] / per_tok[256]
     rows.append((
-        "complexity/linear_check", 0.0,
+        "complexity/linear_check", 0.0, 0.0,
         f"us_per_tok growth 256->2048 = {growth:.2f}x (1.0 = perfectly linear)",
     ))
+    write_results("complexity", {
+        "shape": {"B": 1, "H": 2, "d": 32, "chunk": 64},
+        "growth_256_to_2048": round(growth, 3),
+        "entries": entries,
+    })
 
 
 def bench_statesize(rows):
@@ -100,6 +211,7 @@ def bench_statesize(rows):
     from repro.models import lm
 
     cfg = get_config("hla-1b", reduced=True)
+    entries = {}
     for n_ctx in (1024, 8192, 65536):
         states = jax.eval_shape(lambda: lm.lm_init_states(cfg, 1, n_ctx))
         hla_bytes = sum(
@@ -115,9 +227,15 @@ def bench_statesize(rows):
             for x in jax.tree.leaves(states_sm)
         )
         rows.append((
-            f"statesize/ctx{n_ctx}", 0.0,
+            f"statesize/ctx{n_ctx}", 0.0, 0.0,
             f"hla_state={hla_bytes/2**20:.2f}MiB kv_cache={kv_bytes/2**20:.2f}MiB",
         ))
+        entries[f"ctx{n_ctx}"] = {"hla_state_bytes": hla_bytes,
+                                  "kv_cache_bytes": kv_bytes}
+    write_results("statesize", {
+        "shape": {"arch": "hla-1b-reduced", "B": 1},
+        "entries": entries,
+    })
 
 
 def bench_chunkwidth(rows):
@@ -125,12 +243,22 @@ def bench_chunkwidth(rows):
 
     rng = np.random.RandomState(2)
     q, k, v, g = _mk(rng, 2, 4, 2048, 64)
+    entries = {}
     for w in (16, 32, 64, 128, 256):
         fn = jax.jit(
             lambda a, b, c, gg, w=w: hla2_chunkwise(a, b, c, gg, chunk=w)[0]
         )
-        us = _timeit(fn, q, k, v, g, iters=3)
-        rows.append((f"chunkwidth/w{w}", us, f"tok_per_s={2048*2/us*1e6:.0f}"))
+        t = _timeit(fn, q, k, v, g)
+        tok_s = 2048 * 2 / t.us * 1e6
+        rows.append((f"chunkwidth/w{w}", t.us, t.iqr_us,
+                     f"tok_per_s={tok_s:.0f}"))
+        entries[f"w{w}"] = {"us": round(t.us, 1),
+                            "iqr_us": round(t.iqr_us, 1),
+                            "tok_per_s": round(tok_s)}
+    write_results("chunkwidth", {
+        "shape": {"B": 2, "H": 4, "n": 2048, "d": 64},
+        "entries": entries,
+    })
 
 
 def bench_kernels(rows):
@@ -146,8 +274,16 @@ def bench_kernels(rows):
     o_r, _ = kref.hla2_chunk_ref(q, k, v, None, chunk=64)
     err = float(jnp.max(jnp.abs(o_p - o_r)))
     fn = jax.jit(lambda a, b, c: kref.hla2_chunk_ref(a, b, c, None, chunk=64)[0])
-    us = _timeit(fn, q, k, v, iters=3)
-    rows.append(("kernels/hla2_chunk_ref", us, f"pallas_interpret_err={err:.2e}"))
+    t = _timeit(fn, q, k, v)
+    rows.append(("kernels/hla2_chunk_ref", t.us, t.iqr_us,
+                 f"pallas_interpret_err={err:.2e}"))
+    write_results("kernels", {
+        "shape": {"BH": 4, "n": 256, "d": 64, "chunk": 64},
+        "entries": {"hla2_chunk_ref": {
+            "us": round(t.us, 1), "iqr_us": round(t.iqr_us, 1),
+            "pallas_interpret_err": err,
+        }},
+    })
 
 
 def bench_train_step(rows):
@@ -160,9 +296,6 @@ def bench_train_step(rows):
     path end to end.  On CPU the kernels execute in interpret mode (Python
     body per grid step), so the XLA-compiled ``*_ref`` row is the relevant
     CPU number — on TPU the same entries time the native kernels.
-
-    Results are also dumped to ``results/train_step.json`` so
-    ``benchmarks.report`` can track the training-throughput trajectory.
     """
     from repro.kernels.ops import ahla_attention, hla2_attention
 
@@ -190,21 +323,24 @@ def bench_train_step(rows):
     results = {}
     for name, loss in entries.items():
         step = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
-        us = _timeit(step, q, k, v, g, iters=3, warmup=1)
-        tok_s = B * n / us * 1e6  # tokens (not head-tokens) per second
+        t = _timeit(step, q, k, v, g, warmup=1)
+        tok_s = B * n / t.us * 1e6  # tokens (not head-tokens) per second
         rows.append((
-            f"train_step/{name}", us,
+            f"train_step/{name}", t.us, t.iqr_us,
             f"tok_per_s={tok_s:.0f} backend={backend}",
         ))
-        results[name] = {"us_per_step": round(us, 1),
+        _metric(rows, f"train_step/{name}/tok_per_s", tok_s,
+                unit="tok/s", direction="higher",
+                dispersion=_tps_disp(tok_s, t))
+        results[name] = {"us_per_step": round(t.us, 1),
+                         "iqr_us": round(t.iqr_us, 1),
+                         "iters": t.iters,
                          "tok_per_s": round(tok_s)}
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "train_step.json"), "w") as f:
-        json.dump({
-            "backend": backend,
-            "shape": {"B": B, "H": H, "n": n, "d": d, "chunk": 64},
-            "entries": results,
-        }, f, indent=1)
+    write_results("train_step", {
+        "backend": backend,
+        "shape": {"B": B, "H": H, "n": n, "d": d, "chunk": 64},
+        "entries": results,
+    })
 
 
 def bench_decode_throughput(rows):
@@ -228,13 +364,33 @@ def bench_decode_throughput(rows):
         return lg, st
 
     lg, states = step(params, tok, states, pos)  # compile
-    t0 = time.perf_counter()
-    iters = 20
-    for i in range(iters):
+    # sequential recurrence: sample per-step times in place (the state
+    # advances every call, so the generic _timeit can't replay args)
+    samples, total, i = [], 0.0, 0
+    while len(samples) < MIN_TIME_ITERS or (
+        total < MIN_MEASURE_S and len(samples) < MAX_TIME_ITERS
+    ):
+        t0 = time.perf_counter()
         lg, states = step(params, tok, states, pos + i)
-    jax.block_until_ready(lg)
-    us = (time.perf_counter() - t0) / iters * 1e6
-    rows.append(("decode/hla2_reduced", us, f"tok_per_s={B/us*1e6:.0f}"))
+        jax.block_until_ready(lg)
+        samples.append(time.perf_counter() - t0)
+        total += samples[-1]
+        i += 1
+    t = _stats(samples)
+    tok_s = B / t.us * 1e6
+    rows.append(("decode/hla2_reduced", t.us, t.iqr_us,
+                 f"tok_per_s={tok_s:.0f}"))
+    _metric(rows, "decode/hla2_reduced/tok_per_s", tok_s,
+            unit="tok/s", direction="higher",
+            dispersion=_tps_disp(tok_s, t))
+    write_results("decode", {
+        "backend": jax.default_backend(),
+        "shape": {"B": B, "arch": "hla-1b-reduced"},
+        "entries": {"hla2_reduced": {
+            "us_per_step": round(t.us, 1), "iqr_us": round(t.iqr_us, 1),
+            "iters": t.iters, "tok_per_s": round(tok_s),
+        }},
+    })
 
 
 def bench_serving(rows):
@@ -243,8 +399,7 @@ def bench_serving(rows):
     Chunk-parallel prefill admissions interleaved with block decode over
     the reduced paper model (repro.serving.Engine); TTFT = admission ->
     first sampled token (one prefill call + sample), steady-state tok/s =
-    generated tokens / decode wall time.  Dumped to ``results/serving.json``
-    for ``benchmarks.report`` (§Serving table).
+    generated tokens / decode wall time.
     """
     from repro.configs import get_config
     from repro.models import lm
@@ -274,52 +429,61 @@ def bench_serving(rows):
     ttft_ms = 1e3 * float(np.mean(st["ttft_s"]))
     ttft_p50 = 1e3 * (ttft_hist.quantile(0.5) or 0.0)
     ttft_p99 = 1e3 * (ttft_hist.quantile(0.99) or 0.0)
+    ttft_iqr_ms = 1e3 * max(
+        (ttft_hist.quantile(0.75) or 0.0) - (ttft_hist.quantile(0.25) or 0.0),
+        0.0,
+    )
     # exclude each request's first token (produced by prefill) from the
     # steady-state decode rate
     decode_toks = sum(len(r.tokens) - 1 for r in results)
     tok_s = decode_toks / max(st["decode_s"], 1e-9)
     backend = jax.default_backend()
     rows.append((
-        "serving/ttft", ttft_ms * 1e3,
+        "serving/ttft", ttft_ms * 1e3, ttft_iqr_ms * 1e3,
         f"ttft_ms_p50={ttft_p50:.1f} p99={ttft_p99:.1f} "
         f"prompt_len={prompt_len} backend={backend}",
     ))
     rows.append((
-        "serving/decode", 0.0,
+        "serving/decode", 0.0, 0.0,
         f"tok_per_s={tok_s:.1f} slots={slots} block={block}",
     ))
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "serving.json"), "w") as f:
-        json.dump({
-            "backend": backend,
-            "shape": {"slots": slots, "prompt_len": prompt_len,
-                      "gen_len": gen_len, "block": block,
-                      "requests": len(reqs)},
-            "ttft_ms_mean": round(ttft_ms, 2),
-            "ttft_ms_p50": round(ttft_p50, 2),
-            "ttft_ms_p99": round(ttft_p99, 2),
-            "decode_tok_per_s": round(tok_s, 1),
-            "prefill_tok_per_s": round(
-                st["prompt_tokens"] / max(st["prefill_s"], 1e-9), 1
-            ),
-            # the same snapshot schema the serve CLI's --metrics-out dumps,
-            # scoped to the bench's engine (report.py and ad-hoc tooling
-            # can consume either artifact identically)
-            "metrics": engine.obs.snapshot(),
-        }, f, indent=1)
+    _metric(rows, "serving/ttft_ms", ttft_ms, unit="ms",
+            direction="lower", dispersion=ttft_iqr_ms)
+    _metric(rows, "serving/decode_tok_per_s", tok_s, unit="tok/s",
+            direction="higher")
+    write_results("serving", {
+        "backend": backend,
+        "shape": {"slots": slots, "prompt_len": prompt_len,
+                  "gen_len": gen_len, "block": block,
+                  "requests": len(reqs)},
+        "ttft_ms_mean": round(ttft_ms, 2),
+        "ttft_ms_p50": round(ttft_p50, 2),
+        "ttft_ms_p99": round(ttft_p99, 2),
+        "decode_tok_per_s": round(tok_s, 1),
+        "prefill_tok_per_s": round(
+            st["prompt_tokens"] / max(st["prefill_s"], 1e-9), 1
+        ),
+        # the same snapshot schema the serve CLI's --metrics-out dumps,
+        # scoped to the bench's engine (report.py and ad-hoc tooling
+        # can consume either artifact identically)
+        "metrics": engine.obs.snapshot(),
+    })
 
 
 def bench_ops(rows):
-    """Per-operator train-forward and decode throughput over EVERY
-    registered ``SequenceOp`` (DESIGN.md §11).
+    """Per-operator train-forward and decode throughput + roofline
+    utilization over EVERY registered ``SequenceOp`` (DESIGN.md §11/§15).
 
     Same reduced backbone for all ops (only the mixing sublayer differs),
     so the matrix shows the relative cost of each operator AND makes any
     registry-dispatch overhead visible in the perf trajectory: train-fwd
     tok/s is one jitted ``lm_apply`` over (B, n), decode tok/s is a
     jitted ``lax.scan`` of fused single-token steps (the serving block
-    path without sampling).  Dumped to ``results/ops.json`` for
-    ``benchmarks.report`` (§Operator table).
+    path without sampling).  Each measured tok/s is combined with the
+    analytic whole-model cost (``repro.obs.costs.model_cost``) and the
+    device roofline into achieved-vs-peak utilization — the §Utilization
+    table in ``benchmarks.report`` and the number the fused-kernel
+    ROADMAP work is judged by.
     """
     import functools
 
@@ -327,9 +491,12 @@ def bench_ops(rows):
     from repro.models import lm, seq_op
     from repro.models.config import MambaConfig
     from repro.models.param import init_params
+    from repro.obs import costs
+    from repro.obs.perf import device_peak, roofline_utilization
 
     base = get_config("hla-1b", reduced=True)
     B, n, steps = 4, 256, 16
+    peak = device_peak()
     entries = {}
     for name in seq_op.registered_op_names():
         cfg = base.replace(mixer=("softmax" if name == "attn" else name))
@@ -342,7 +509,7 @@ def bench_ops(rows):
         fwd = jax.jit(functools.partial(
             lambda p, t, cfg: lm.lm_apply(p, t, cfg)[0], cfg=cfg
         ))
-        us_fwd = _timeit(fwd, params, toks, iters=3, warmup=1)
+        t_fwd = _timeit(fwd, params, toks, warmup=1)
 
         _, states = jax.jit(functools.partial(
             lambda p, t, cfg: lm.lm_prefill(p, t, cfg), cfg=cfg
@@ -363,35 +530,59 @@ def bench_ops(rows):
 
         tok0 = toks[:, -1:]
         pos0 = jnp.full((B, 1), n, jnp.int32)
-        us_dec = _timeit(
-            jax.jit(decode_block), params, states, tok0, pos0,
-            iters=3, warmup=1,
+        t_dec = _timeit(
+            jax.jit(decode_block), params, states, tok0, pos0, warmup=1,
         )
 
         op = seq_op.get_op(name)
-        train_tok_s = B * n / (us_fwd / 1e6)
-        decode_tok_s = B * steps / (us_dec / 1e6)
+        train_tok_s = B * n / (t_fwd.us / 1e6)
+        decode_tok_s = B * steps / (t_dec.us / 1e6)
+
+        # achieved-vs-roofline: measured tok/s x analytic whole-model
+        # FLOPs/token against the device peak
+        cost_f = costs.model_cost(cfg, mode="train_fwd", seq_len=n, batch=B)
+        cost_d = costs.model_cost(cfg, mode="decode_step", seq_len=n + steps,
+                                  batch=B)
+        util_f = roofline_utilization(train_tok_s, cost_f, peak)
+        util_d = roofline_utilization(decode_tok_s, cost_d, peak)
+
         entries[name] = {
             "train_fwd_tok_per_s": round(train_tok_s, 1),
+            "train_iqr_us": round(t_fwd.iqr_us, 1),
             "decode_tok_per_s": round(decode_tok_s, 1),
+            "decode_iqr_us": round(t_dec.iqr_us, 1),
+            "train_flops_per_token": round(cost_f.flops_per_token),
+            "decode_flops_per_token": round(cost_d.flops_per_token),
+            "train_util": round(util_f["utilization"], 6),
+            "train_bound": util_f["bound"],
+            "decode_util": round(util_d["utilization"], 6),
+            "decode_bound": util_d["bound"],
+            "state_bytes": cost_f.state_bytes,
             "streaming": op.streaming,
             "has_fused_kernels": op.has_fused_kernels,
             "spec_decodable": op.spec_decodable,
         }
         rows.append((
-            f"ops/{name}", us_fwd,
+            f"ops/{name}", t_fwd.us, t_fwd.iqr_us,
             f"train_fwd_tok_per_s={train_tok_s:.0f} "
-            f"decode_tok_per_s={decode_tok_s:.0f}",
+            f"decode_tok_per_s={decode_tok_s:.0f} "
+            f"train_util={util_f['utilization']:.4f} "
+            f"decode_util={util_d['utilization']:.4f}",
         ))
+        _metric(rows, f"ops/{name}/train_fwd_tok_per_s", train_tok_s,
+                unit="tok/s", direction="higher",
+                dispersion=_tps_disp(train_tok_s, t_fwd))
+        _metric(rows, f"ops/{name}/decode_tok_per_s", decode_tok_s,
+                unit="tok/s", direction="higher",
+                dispersion=_tps_disp(decode_tok_s, t_dec))
 
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "ops.json"), "w") as f:
-        json.dump({
-            "backend": jax.default_backend(),
-            "shape": {"B": B, "n": n, "decode_steps": steps,
-                      "arch": "hla-1b-reduced"},
-            "entries": entries,
-        }, f, indent=1)
+    write_results("ops", {
+        "backend": jax.default_backend(),
+        "shape": {"B": B, "n": n, "decode_steps": steps,
+                  "arch": "hla-1b-reduced"},
+        "peak": peak,
+        "entries": entries,
+    })
 
 
 def bench_spec(rows):
@@ -413,8 +604,7 @@ def bench_spec(rows):
 
     The win mechanism: a fully-accepted round commits k+1 tokens for ONE
     chunk-parallel verify call, while plain decode pays k+1 sequential
-    full-model steps.  Dumped to ``results/spec.json`` for
-    ``benchmarks.report`` (§Speculative table).
+    full-model steps.
     """
     from repro.configs import get_config
     from repro.models import lm
@@ -452,7 +642,7 @@ def bench_spec(rows):
             params, opt, jnp.asarray(toks[:, :-1]), jnp.asarray(toks[:, 1:])
         )
     rows.append((
-        "spec/train_workload", 0.0,
+        "spec/train_workload", 0.0, 0.0,
         f"steps={train_steps} final_loss={float(loss):.1e} "
         f"train_s={time.perf_counter() - t0:.1f}",
     ))
@@ -479,8 +669,10 @@ def bench_spec(rows):
 
     plain_tps, _, plain_res = measure(None)
     rows.append((
-        "spec/plain_decode", 0.0, f"tok_per_s={plain_tps:.1f} block=8",
+        "spec/plain_decode", 0.0, 0.0, f"tok_per_s={plain_tps:.1f} block=8",
     ))
+    _metric(rows, "spec/plain_decode/tok_per_s", plain_tps,
+            unit="tok/s", direction="higher")
     entries = []
     for k in (2, 4, 8):
         tps, st, res = measure(SpecConfig(k=k, drafter="ngram"))
@@ -499,21 +691,21 @@ def bench_spec(rows):
         }
         entries.append(ent)
         rows.append((
-            f"spec/ngram_k{k}", 0.0,
+            f"spec/ngram_k{k}", 0.0, 0.0,
             f"tok_per_s={tps:.1f} speedup={ent['speedup']}x "
             f"acceptance={acc:.2f}",
         ))
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "spec.json"), "w") as f:
-        json.dump({
-            "backend": jax.default_backend(),
-            "shape": {"slots": slots, "prompt_len": len(prompt),
-                      "gen_len": gen_len, "requests": 4,
-                      "drafter": "ngram", "model": "hla2-4L-256d",
-                      "workload": f"cyclic period-{period} (trained)"},
-            "plain_tok_per_s": round(plain_tps, 1),
-            "entries": entries,
-        }, f, indent=1)
+        _metric(rows, f"spec/ngram_k{k}/tok_per_s", tps,
+                unit="tok/s", direction="higher")
+    write_results("spec", {
+        "backend": jax.default_backend(),
+        "shape": {"slots": slots, "prompt_len": len(prompt),
+                  "gen_len": gen_len, "requests": 4,
+                  "drafter": "ngram", "model": "hla2-4L-256d",
+                  "workload": f"cyclic period-{period} (trained)"},
+        "plain_tok_per_s": round(plain_tps, 1),
+        "entries": entries,
+    })
 
 
 def bench_distributed(rows):
@@ -525,8 +717,7 @@ def bench_distributed(rows):
     (``distributed.steps.make_train_step`` on a ("data", "model") mesh
     from ``launch.mesh.make_mesh``) over the reduced paper model.  On CPU
     host devices the absolute numbers are smoke-level; the per-device
-    ratio tracks sharding overhead.  Dumped to ``results/distributed.json``
-    for ``benchmarks.report`` (§Distributed table).
+    ratio tracks sharding overhead.
     """
     import subprocess
     import sys
@@ -592,16 +783,16 @@ def bench_distributed(rows):
         entries.append(r)
         rows.append((
             f"distributed/train_dev{r['devices']}",
-            1e6 / r["steps_per_s"],
+            1e6 / r["steps_per_s"], 0.0,
             f"tok_per_s={r['tok_per_s']} per_device={r['tok_per_s_per_device']}",
         ))
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "distributed.json"), "w") as f:
-        json.dump({
-            "backend": "cpu-host-mesh",
-            "shape": {"B": B, "n": n, "arch": "hla-1b-reduced"},
-            "entries": entries,
-        }, f, indent=1)
+        _metric(rows, f"distributed/train_dev{r['devices']}/tok_per_s",
+                r["tok_per_s"], unit="tok/s", direction="higher")
+    write_results("distributed", {
+        "backend": "cpu-host-mesh",
+        "shape": {"B": B, "n": n, "arch": "hla-1b-reduced"},
+        "entries": entries,
+    })
 
 
 BENCHES = {
@@ -627,20 +818,50 @@ def main(argv=None) -> None:
     """``python -m benchmarks.run [bench_name ...]`` — no args runs the
     default set (everything except the subprocess-spawning
     ``bench_distributed``)."""
-    import sys
+    import argparse
 
-    names = list(argv if argv is not None else sys.argv[1:]) or list(
-        DEFAULT_BENCHES
+    from repro.obs import Obs
+    from repro.obs.perf import BenchHistory, profile_capture
+
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="Benchmark harness; no names runs the default set.",
     )
+    ap.add_argument("benches", nargs="*", metavar="bench_name",
+                    help=f"subset of {list(BENCHES)}")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append this run's rows to a repro.obs.bench/v1 "
+                         "history JSONL (perfcheck's input)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the whole run "
+                         "into DIR (view with TensorBoard / Perfetto)")
+    args = ap.parse_args(argv)
+
+    names = args.benches or list(DEFAULT_BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         raise SystemExit(f"unknown benches {unknown}; have {list(BENCHES)}")
-    rows = []
-    for n in names:
-        BENCHES[n](rows)
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    rows = RowSink()
+    obs = Obs()
+    with profile_capture(args.profile_dir, obs=obs):
+        for n in names:
+            with obs.span("bench.run", bench=n):
+                BENCHES[n](rows)
+    print("name,us_per_call,iqr_us,derived")
+    for name, us, iqr, derived in rows:
+        print(f"{name},{us:.1f},{iqr:.1f},{derived}")
+    if args.history:
+        hist = BenchHistory(args.history)
+        for name, us, iqr, derived in rows:
+            if us > 0:
+                hist.bench_row(name, us, unit="us", direction="lower",
+                               dispersion=iqr)
+        for m in rows.metrics:
+            hist.bench_row(m["name"], m["value"], unit=m["unit"],
+                           direction=m["direction"],
+                           dispersion=m["dispersion"])
+        print(f"# history: {hist.rows_written} rows appended to "
+              f"{args.history} (run {hist.run_id})")
 
 
 if __name__ == "__main__":

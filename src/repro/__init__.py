@@ -11,6 +11,11 @@ Importing the package configures jax for sharding-invariant numerics:
   pure function of (key, position), identical under any mesh.
 """
 
-import jax as _jax
-
-_jax.config.update("jax_threefry_partitionable", True)
+try:
+    import jax as _jax
+except ModuleNotFoundError:
+    # stdlib-only tools (obs.perfcheck, obs.validate) run on bare CI
+    # python with no jax; everything else fails at its own jax import
+    pass
+else:
+    _jax.config.update("jax_threefry_partitionable", True)

@@ -108,12 +108,12 @@ class BarePrintRule(Rule):
     description = (
         "Library code reports through repro.obs (metrics/events) or a "
         "log= callable, never bare print().  CLIs under launch/ and "
-        "analysis/, plus the obs validator CLI, are user-facing and "
-        "exempt."
+        "analysis/, plus the obs validator and perfcheck CLIs, are "
+        "user-facing and exempt."
     )
 
     EXEMPT_DIRS = ("launch/", "analysis/")
-    EXEMPT_FILES = ("obs/validate.py",)
+    EXEMPT_FILES = ("obs/validate.py", "obs/perfcheck.py")
 
     def check_module(self, mod):
         p = mod.pkg_path
@@ -579,15 +579,20 @@ class ObsNamingRule(Rule):
         "Metric names are `<subsystem>_<what>[_<unit>]` snake_case; "
         "counters end `_total`, histograms end in a unit "
         "(_seconds/_bytes/_tokens/_ratio), gauges carry neither.  "
-        "Event/span names are dotted `<component>.<event>`.  Dashboards "
-        "and the CI validator key on these shapes (DESIGN.md §13)."
+        "Event/span names are dotted `<component>.<event>`.  Bench "
+        "history rows (`bench_row`, repro.obs.perf) are slash-separated "
+        "snake_case paths `<bench>/<row>[/<metric>]` — perfcheck and the "
+        "report trend column key rows by these names.  Dashboards "
+        "and the CI validator key on these shapes (DESIGN.md §13/§15)."
     )
 
     METRIC_RE = re.compile(r"^[a-z][a-z0-9]*(_[a-z0-9]+)+$")
     EVENT_RE = re.compile(r"^[a-z][a-z0-9_]*(\.[a-z][a-z0-9_]*)+$")
+    BENCH_RE = re.compile(r"^[a-z][a-z0-9_]*(/[a-z0-9_]+)+$")
     HIST_UNITS = ("_seconds", "_bytes", "_tokens", "_ratio")
     METRIC_METHODS = ("counter", "gauge", "histogram")
     EVENT_METHODS = ("event", "span", "timer")
+    BENCH_METHODS = ("bench_row",)
 
     def _bad_metric(self, family: str, name: str) -> Optional[str]:
         if not self.METRIC_RE.match(name):
@@ -622,6 +627,13 @@ class ObsNamingRule(Rule):
                         mod, node,
                         f"{meth} name {name!r} is not dotted "
                         "`<component>.<event>` lowercase",
+                    )
+            elif meth in self.BENCH_METHODS:
+                if not self.BENCH_RE.match(name):
+                    yield self.finding(
+                        mod, node,
+                        f"{meth} name {name!r} is not a slash-separated "
+                        "`<bench>/<row>[/<metric>]` snake_case path",
                     )
 
 

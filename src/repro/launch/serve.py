@@ -50,7 +50,7 @@ from ..configs import get_config  # noqa: E402
 from ..distributed import sharding as shd  # noqa: E402
 from ..models import lm  # noqa: E402
 from ..models.param import init_params  # noqa: E402
-from ..obs import JsonlSink, Obs, write_metrics  # noqa: E402
+from ..obs import JsonlSink, Obs, profile_capture, write_metrics  # noqa: E402
 from ..runtime.faults import FaultPlan, parse_fault  # noqa: E402
 from ..serving import Engine, GenRequest, SamplingConfig, SpecConfig  # noqa: E402
 from .mesh import make_mesh, mesh_summary  # noqa: E402
@@ -98,6 +98,11 @@ def main(argv=None):
                     help="stream span/event records (repro.obs.events/v1 "
                          "JSONL) for the measured run — request "
                          "lifecycles, decode blocks, fired faults")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the measured "
+                         "traffic (not the warmup) into DIR; "
+                         "profile.start/stop events carry matching "
+                         "wall-clock stamps")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced, mixer=args.mixer)
@@ -158,7 +163,8 @@ def main(argv=None):
         if args.inject:
             engine.faults = FaultPlan(*[parse_fault(s) for s in args.inject])
         t0 = time.time()
-        results = engine.run(requests)
+        with profile_capture(args.profile_dir, obs=engine.obs):
+            results = engine.run(requests)
         dt = time.time() - t0
         st = engine.stats
         gen = st["generated_tokens"]

@@ -30,7 +30,7 @@ from ..data.pipeline import DataConfig, SyntheticStream  # noqa: E402
 from ..distributed import sharding as shd  # noqa: E402
 from ..distributed import steps as steps_mod  # noqa: E402
 from ..models.param import init_params  # noqa: E402
-from ..obs import JsonlSink, Obs, write_metrics  # noqa: E402
+from ..obs import JsonlSink, Obs, profile_capture, write_metrics  # noqa: E402
 from ..optim import adamw  # noqa: E402
 from ..runtime.faults import FaultPlan, FaultSpec  # noqa: E402
 from ..runtime.ft import FaultTolerantLoop  # noqa: E402
@@ -62,6 +62,10 @@ def main(argv=None):
                     help="stream span/event records (repro.obs.events/v1 "
                          "JSONL): train.step spans, ckpt.save spans, "
                          "resume events, fired faults")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the whole run "
+                         "into DIR; profile.start/stop events on the obs "
+                         "stream carry matching wall-clock stamps")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced, mixer=args.mixer)
@@ -115,7 +119,10 @@ def main(argv=None):
             metrics_path=args.metrics, faults=faults,
             place_batch=place, obs=obs,
         )
-        params, opt_state, last = loop.run(params, opt_state, args.steps)
+        with profile_capture(args.profile_dir, obs=obs):
+            params, opt_state, last = loop.run(
+                params, opt_state, args.steps
+            )
     step_s = obs.registry.get("train_step_seconds")
     p50 = step_s.quantile(0.5) or 0.0
     p99 = step_s.quantile(0.99) or 0.0

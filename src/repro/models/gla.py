@@ -178,11 +178,31 @@ def _gla_step(p, x_t, state, cfg, *, positions=None):
     return dense_apply(p["wo"], o), state
 
 
+def _gla_cost_model(cfg, *, mode, seq_len, batch):
+    """Analytic state-math costs (the registry's ``cost_model`` worked
+    example; contract in ``seq_op.SequenceOp`` + DESIGN.md §15).
+
+    The chunk width is FIXED at ``GLA_CHUNK`` (the exp-factorization
+    range bound), not ``cfg.hla.chunk`` — which is exactly why this op
+    carries its own hook instead of relying on the generic family table.
+    Per token per head: intra-chunk scores + apply cost ``2c(dk+dv)``,
+    the gated carry update/readout ``6·dk·dv``; decode is the O(1)
+    recurrence ``5·dk·dv`` (gate-decay, outer product, readout).
+    """
+    H, dk, dv = cfg.n_heads, cfg.head_dim, cfg.head_dim
+    if mode == "decode_step":
+        return {"state_flops_per_token": H * 5.0 * dk * dv}
+    c = min(GLA_CHUNK, seq_len)
+    return {"state_flops_per_token": H * (2.0 * c * (dk + dv)
+                                          + 6.0 * dk * dv)}
+
+
 seq_op.register_op(seq_op.SequenceOp(
     name="gla",
     specs=gla_specs,
     forward=_gla_forward,
     step=_gla_step,
+    cost_model=_gla_cost_model,
     init_state=lambda cfg, B, *, max_len=0, dtype=None: gla_init_state(
         (B, cfg.n_heads), cfg.head_dim, cfg.head_dim,
         jnp.float32 if dtype is None else dtype,

@@ -87,6 +87,14 @@ class SequenceOp:
     needs_positions: bool = False
     self_contained: bool = False
     prealloc_state: bool = False
+    # optional analytic-cost override consumed by ``repro.obs.costs``:
+    # ``cost_model(cfg, *, mode, seq_len, batch) -> dict`` may return
+    # ``state_flops_per_token`` and/or ``state_bytes_per_token`` to
+    # replace the builtin family formula for this op's state math
+    # (projection FLOPs and state bytes always derive from the record's
+    # own specs/init_state).  See ``models/gla.py`` for the worked
+    # example and ``docs/DESIGN.md`` §15 for the contract.
+    cost_model: Optional[Callable[..., Dict[str, float]]] = None
     # key the operator's params live under inside a layer's param dict
     # (kept stable for existing checkpoints: HLA family -> "mixer")
     param_key: Optional[str] = None

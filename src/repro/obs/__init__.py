@@ -14,7 +14,15 @@ One substrate for every number the stack reports (DESIGN.md §13):
 * ``timeline``  — per-request lifecycle reconstruction + completeness
   checks;
 * ``validate``  — CLI schema validator for CI
-  (``python -m repro.obs.validate``).
+  (``python -m repro.obs.validate``);
+* ``perf``      — roofline utilization, ``jax.profiler`` capture,
+  append-only bench history (``repro.obs.bench/v1``);
+* ``perfcheck`` — noise-aware bench regression gate
+  (``python -m repro.obs.perfcheck old new --tol ...``);
+* ``costs``     — analytic per-SequenceOp FLOPs/bytes cost model
+  (NOT imported here: it pulls in jax eagerly, while this package —
+  like ``registry``/``validate``/``perfcheck`` — stays importable from
+  bare-stdlib CI contexts).
 
 ``Obs`` bundles one registry + one tracer, which is what components
 take (``Engine(obs=...)``, ``FaultTolerantLoop(obs=...)``,
@@ -39,6 +47,13 @@ from .sinks import (  # noqa: F401
     read_jsonl,
     write_metrics,
     write_prometheus,
+)
+from .perf import (  # noqa: F401
+    BENCH_SCHEMA,
+    BenchHistory,
+    env_fingerprint,
+    profile_capture,
+    read_bench,
 )
 from .timeline import (  # noqa: F401
     check_timelines,

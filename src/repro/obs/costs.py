@@ -1,0 +1,416 @@
+"""Analytic per-op cost model for every registered ``SequenceOp``.
+
+One question, answered without running anything: *how many FLOPs and how
+many HBM bytes does operator X move per token* on each of its execution
+paths — ``train_fwd`` / ``train_bwd`` (full-sequence chunkwise),
+``prefill`` (same chunk math, one call), and ``decode_step`` (the O(1)
+state recurrence)?  ``benchmarks/run.py`` divides measured tok/s by these
+numbers to get achieved FLOP/s, and ``repro.obs.perf`` turns that into
+roofline utilization — the figure of merit the fused-kernel and
+distributed ROADMAP items are driven by.
+
+Derivation (DESIGN.md §15):
+
+* **Projections** come from the record's own ``specs(cfg)``: every dense
+  weight performs one multiply-accumulate per token, so the projection
+  term is ``2 * param_count(specs)`` FLOPs/token — exact for the
+  matmul-dominated sublayers, and automatically correct for any new
+  operator the registry gains.
+* **State math** is per family, from the paper's §5 complexity analysis
+  and the chunkwise formulation in DESIGN.md §2: linear attention carries
+  an O(d·dv) state (2 matvecs/token), HLA2 adds the O(d²) second-moment
+  update plus the intra-chunk masked ``(c×c)·(c×c)`` product, AHLA is two
+  first-order passes, HLA3 composes LinAttn∘HLA2, and the paper-faithful
+  HLA3 additionally carries the ⊗3 cross terms.  Chunk width enters as
+  ``c = min(cfg chunk, seq_len)``.
+* **State bytes** are *measured abstractly*: ``jax.eval_shape`` over the
+  record's ``init_state`` — exact, allocation-free, and the paper's
+  O(1)-in-n constant-state claim is a testable property of the result
+  (tests/test_costs.py).
+* A record may override the state-math term via the optional
+  ``SequenceOp.cost_model`` hook (see ``models/gla.py``); projections and
+  state bytes always come from the registry record itself.
+
+Cross-check: ``xla_cost`` compiles a callable and reports both the raw
+``compiled.cost_analysis()`` numbers and the loop-aware account from
+``repro.analysis.hlo_analysis`` (which multiplies while-bodies by their
+trip counts — the raw numbers undercount scan-over-chunk paths).
+tests/test_costs.py holds every registered op's analytic FLOPs within a
+factor-of-2 band of the measured dot FLOPs on small shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+MODES = ("train_fwd", "train_bwd", "train_step", "prefill", "decode_step")
+
+#: forward-activation HBM round-trips per token, in units of
+#: d_model * 4 bytes (residual in/out, q/k/v/o tiles, norm scratch).
+_ACT_ROUNDTRIPS = 12.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """Per-token cost of one SequenceOp path (one batch-element token)."""
+
+    op: str
+    mode: str
+    flops_per_token: float
+    bytes_per_token: float
+    state_bytes: int  # decode-state bytes per sequence
+    breakdown: Dict[str, float]
+
+    def as_dict(self) -> dict:
+        return {
+            "op": self.op, "mode": self.mode,
+            "flops_per_token": self.flops_per_token,
+            "bytes_per_token": self.bytes_per_token,
+            "state_bytes": self.state_bytes,
+            "breakdown": dict(self.breakdown),
+        }
+
+
+def _dims(cfg):
+    """(heads, key dim, value dim) for the projection-style families."""
+    return cfg.n_heads, cfg.head_dim, cfg.head_dim
+
+
+def _chunk(cfg, seq_len: int) -> int:
+    return max(1, min(int(cfg.hla.chunk), int(seq_len)))
+
+
+# --------------------------------------------------------------------------
+# family state-math tables: FLOPs/token beyond the projections
+# --------------------------------------------------------------------------
+
+
+def _fwd_linattn(cfg, c, n):
+    """One chunkwise first-order pass: intra-chunk masked matmul
+    (scores + apply) + per-chunk carry update and state readout."""
+    H, d, dv = _dims(cfg)
+    return H * (2 * c * (d + dv) + 4 * d * dv)
+
+
+def _fwd_hla2(cfg, c, n):
+    """DESIGN.md §2 masked-matmul form: QK^T/KQ^T scores, the (c×c)·(c×c)
+    second-order product, S/C/G carries and the S·C cross term."""
+    H, d, dv = _dims(cfg)
+    intra = 8 * c * d + 2 * c * c + 6 * c * dv
+    carry = 4 * d * d + 6 * d * dv
+    cross = 4.0 * d * d * dv / c  # S@C-type products, once per chunk
+    return H * (intra + carry + cross)
+
+
+def _fwd_ahla(cfg, c, n):
+    return 2.0 * _fwd_linattn(cfg, c, n)
+
+
+def _fwd_hla3(cfg, c, n):
+    # exact factorization HLA2_masked(Q, K, LinAttn(Q, K, V))
+    return _fwd_linattn(cfg, c, n) + _fwd_hla2(cfg, c, n)
+
+
+def _fwd_hla3_paper(cfg, c, n):
+    # Alg 4 chunkwise: HLA2-shaped masked matmuls + the ⊗3 cross terms
+    # applied to the (S^K, S^Q, P) carry (never materialized).
+    H, d, dv = _dims(cfg)
+    return 1.5 * _fwd_hla2(cfg, c, n) + H * (4.0 * d * d * dv / c)
+
+
+def _fwd_gla(cfg, c, n):
+    # fixed GLA_CHUNK intra window; gate LoRA lives in specs already
+    H, d, dv = _dims(cfg)
+    c = min(32, n)
+    return H * (2 * c * (d + dv) + 6 * d * dv)
+
+
+def _fwd_attn(cfg, c, n):
+    # softmax attention: scores + apply over the causal context (~n/2
+    # average, counted full-n as the kernels compute the padded tile)
+    H, d, dv = _dims(cfg)
+    return H * (2 * n * d + 2 * n * dv)
+
+
+def _fwd_rwkv6(cfg, c, n):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    c = min(32, n)  # RWKV_CHUNK
+    return (d // dh) * (2 * c * (dh + dh) + 8 * dh * dh)
+
+
+def _fwd_mamba(cfg, c, n):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    return 6.0 * d_in * mc.d_state + 2.0 * mc.d_conv * d_in
+
+
+def _dec_linattn(cfg, L):
+    H, d, dv = _dims(cfg)
+    return H * (4 * d * dv + 2 * d)
+
+
+def _dec_hla2(cfg, L):
+    H, d, dv = _dims(cfg)
+    return H * (4 * d * d + 10 * d * dv)
+
+
+def _dec_ahla(cfg, L):
+    H, d, dv = _dims(cfg)
+    return H * (10 * d * dv + 4 * d)
+
+
+def _dec_hla3(cfg, L):
+    return _dec_linattn(cfg, L) + _dec_hla2(cfg, L)
+
+
+def _dec_hla3_paper(cfg, L):
+    return 1.5 * _dec_hla2(cfg, L)
+
+
+def _dec_gla(cfg, L):
+    H, d, dv = _dims(cfg)
+    return H * 5 * d * dv
+
+
+def _dec_attn(cfg, L):
+    # reads the whole KV cache: O(L) per step — the paper's contrast case
+    H, d, dv = _dims(cfg)
+    return H * (2 * L * d + 2 * L * dv)
+
+
+def _dec_rwkv6(cfg, L):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    return (d // dh) * 8 * dh * dh
+
+
+def _dec_mamba(cfg, L):
+    return _fwd_mamba(cfg, 1, 1)
+
+
+_FWD_STATE_FLOPS: Dict[str, Callable] = {
+    "linattn": _fwd_linattn, "hla2": _fwd_hla2, "ahla": _fwd_ahla,
+    "hla3": _fwd_hla3, "hla3_paper": _fwd_hla3_paper, "gla": _fwd_gla,
+    "attn": _fwd_attn, "rwkv6": _fwd_rwkv6, "mamba": _fwd_mamba,
+}
+
+_DEC_STATE_FLOPS: Dict[str, Callable] = {
+    "linattn": _dec_linattn, "hla2": _dec_hla2, "ahla": _dec_ahla,
+    "hla3": _dec_hla3, "hla3_paper": _dec_hla3_paper, "gla": _dec_gla,
+    "attn": _dec_attn, "rwkv6": _dec_rwkv6, "mamba": _dec_mamba,
+}
+
+
+# --------------------------------------------------------------------------
+# registry-record plumbing
+# --------------------------------------------------------------------------
+
+
+def record_param_stats(op, cfg):
+    """(param_count, param_bytes) of the record's own specs."""
+    from ..models.param import param_bytes, param_count
+
+    specs = op.specs(cfg)
+    return param_count(specs), param_bytes(specs)
+
+
+def record_state_bytes(op, cfg, *, max_len: int = 64) -> int:
+    """Decode-state bytes per sequence, measured abstractly (no alloc)."""
+    import functools
+
+    import jax
+    import numpy as np
+
+    abstract = jax.eval_shape(
+        functools.partial(op.init_state, cfg, 1, max_len=max_len)
+    )
+    return int(sum(
+        int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(abstract)
+    ))
+
+
+def _generic_state_flops(op, cfg, mode, n):
+    """Fallback for ops without a family entry or a cost_model hook:
+    read+update+readout of every state element, once per token."""
+    elems = record_state_bytes(op, cfg, max_len=n) / 4.0
+    return 6.0 * elems
+
+
+def record_cost(op, cfg, *, mode: str = "train_fwd",
+                seq_len: Optional[int] = None, batch: int = 1) -> OpCost:
+    """Cost of one path of a ``SequenceOp`` record (see module docstring).
+
+    ``seq_len`` is the per-call sequence length for train/prefill (chunk
+    width saturates at it) and the *context length* for ``decode_step``
+    (only attention's growing KV cache depends on it).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    n = int(seq_len if seq_len is not None else 512)
+    c = _chunk(cfg, n)
+    n_params, p_bytes = record_param_stats(op, cfg)
+    decode = mode == "decode_step"
+    sbytes = record_state_bytes(op, cfg, max_len=max(n, 1))
+
+    proj = 2.0 * n_params
+    hook = op.cost_model(cfg, mode=mode, seq_len=n, batch=batch) \
+        if op.cost_model is not None else {}
+    if "state_flops_per_token" in hook:
+        state_flops = float(hook["state_flops_per_token"])
+    elif decode:
+        fam = _DEC_STATE_FLOPS.get(op.name)
+        state_flops = fam(cfg, n) if fam else _generic_state_flops(
+            op, cfg, mode, n
+        )
+    else:
+        fam = _FWD_STATE_FLOPS.get(op.name)
+        state_flops = fam(cfg, c, n) if fam else _generic_state_flops(
+            op, cfg, mode, n
+        )
+    flops = proj + state_flops
+
+    # bytes/token: weights amortize over the call's tokens; activations
+    # round-trip a few d_model rows; the state carry streams once per
+    # chunk (train/prefill) or once per token (decode).
+    tokens_per_call = max(1, batch * (1 if decode else n))
+    weight_traffic = p_bytes / tokens_per_call
+    act_traffic = _ACT_ROUNDTRIPS * cfg.d_model * 4.0
+    if "state_bytes_per_token" in hook:
+        state_traffic = float(hook["state_bytes_per_token"])
+    else:
+        state_traffic = 2.0 * sbytes * (1.0 if decode else 1.0 / c)
+    bytes_pt = weight_traffic + act_traffic + state_traffic
+
+    scale = {"train_fwd": 1.0, "prefill": 1.0, "decode_step": 1.0,
+             "train_bwd": 2.0, "train_step": 3.0}[mode]
+    return OpCost(
+        op=op.name, mode=mode,
+        flops_per_token=scale * flops,
+        bytes_per_token=scale * bytes_pt,
+        state_bytes=sbytes,
+        breakdown={
+            "proj_flops": scale * proj,
+            "state_flops": scale * state_flops,
+            "weight_bytes": scale * weight_traffic,
+            "act_bytes": scale * act_traffic,
+            "state_traffic_bytes": scale * state_traffic,
+            "chunk": c,
+        },
+    )
+
+
+def op_cost(name: str, cfg, *, mode: str = "train_fwd",
+            seq_len: Optional[int] = None, batch: int = 1) -> OpCost:
+    """Cost of registered operator ``name`` under ``cfg`` (main entry)."""
+    from ..models import seq_op
+
+    return record_cost(seq_op.get_op(name), cfg, mode=mode,
+                       seq_len=seq_len, batch=batch)
+
+
+def model_cost(cfg, *, mode: str = "train_fwd",
+               seq_len: Optional[int] = None, batch: int = 1) -> OpCost:
+    """Whole-LM cost per token around ``cfg``'s operator.
+
+    Benches measure the FULL model's tok/s (embeddings, every layer's
+    mixer + FFN, the unembed head), so utilization must divide by the
+    full model's FLOPs: ``2 * total-param`` projection FLOPs per token
+    (every dense weight is one MAC/token) plus ``n_layers x`` the op's
+    state math.  Used by ``benchmarks/run.py bench_ops`` for the
+    §Utilization table.
+    """
+    from ..models import lm, seq_op
+    from ..models.param import param_bytes, param_count
+
+    op = seq_op.op_for(cfg)
+    opc = record_cost(op, cfg, mode=mode, seq_len=seq_len, batch=batch)
+    specs = lm.lm_specs(cfg)
+    n = int(seq_len if seq_len is not None else 512)
+    decode = mode == "decode_step"
+    scale = {"train_fwd": 1.0, "prefill": 1.0, "decode_step": 1.0,
+             "train_bwd": 2.0, "train_step": 3.0}[mode]
+    n_params, p_bytes = param_count(specs), param_bytes(specs)
+    # breakdown terms of `opc` are already mode-scaled
+    state_flops = opc.breakdown["state_flops"] * cfg.n_layers
+    state_traffic = opc.breakdown["state_traffic_bytes"] * cfg.n_layers
+    flops = scale * 2.0 * n_params + state_flops
+    tokens_per_call = max(1, batch * (1 if decode else n))
+    act = scale * cfg.n_layers * _ACT_ROUNDTRIPS * cfg.d_model * 4.0
+    bytes_pt = scale * p_bytes / tokens_per_call + act + state_traffic
+    return OpCost(
+        op=f"lm/{op.name}", mode=mode,
+        flops_per_token=flops, bytes_per_token=bytes_pt,
+        state_bytes=opc.state_bytes * cfg.n_layers,
+        breakdown={
+            "proj_flops": scale * 2.0 * n_params,
+            "state_flops": state_flops,
+            "weight_bytes": scale * p_bytes / tokens_per_call,
+            "act_bytes": act,
+            "state_traffic_bytes": state_traffic,
+            "chunk": opc.breakdown["chunk"],
+        },
+    )
+
+
+# --------------------------------------------------------------------------
+# XLA cross-check
+# --------------------------------------------------------------------------
+
+
+def xla_cost(fn, *args, loop_aware: bool = True) -> dict:
+    """Compile ``fn(*args)`` and report its FLOPs/bytes two ways.
+
+    ``raw_*`` is ``compiled.cost_analysis()`` (counts while-loop bodies
+    ONCE — undercounts scan-over-chunk paths); ``flops``/``bytes`` are
+    the loop-aware account from ``repro.analysis.hlo_analysis`` when
+    ``loop_aware`` (dot/convolution FLOPs only, multiplied by trip
+    counts), else the raw numbers.
+    """
+    import jax
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: per-device list
+        ca = ca[0] if ca else {}
+    raw_flops = float(ca.get("flops", 0.0) or 0.0)
+    raw_bytes = float(ca.get("bytes accessed", 0.0) or 0.0)
+    out = {"raw_flops": raw_flops, "raw_bytes": raw_bytes,
+           "flops": raw_flops, "bytes": raw_bytes}
+    if loop_aware:
+        from ..analysis.hlo_analysis import analyze
+
+        acc = analyze(compiled.as_text())
+        out["flops"] = acc["flops"]
+        out["bytes"] = acc["bytes"]
+    return out
+
+
+def measured_op_flops(name: str, cfg, *, seq_len: int = 64,
+                      batch: int = 1) -> dict:
+    """Compile the registered op's full-sequence forward on a small shape
+    and return its XLA cost (the tests' factor-of-2 reference)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import seq_op
+    from ..models.param import init_params
+
+    op = seq_op.get_op(name)
+    params = init_params(op.specs(cfg), jax.random.key(0))
+    x = jax.random.normal(
+        jax.random.key(1), (batch, seq_len, cfg.d_model), jnp.float32
+    )
+    positions = jnp.arange(seq_len, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (batch, seq_len))
+
+    def fwd(p, x, positions):
+        y, _ = op.forward(p, x, cfg, state=None, want_state=False,
+                          positions=positions)
+        return y
+
+    cost = xla_cost(fwd, params, x, positions)
+    cost["per_token"] = cost["flops"] / max(1, batch * seq_len)
+    return cost

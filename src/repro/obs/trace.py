@@ -190,4 +190,8 @@ _NESTING_DOC: Dict[str, str] = {
     "ckpt.save": "one checkpoint save (span, async thread)",
     "ckpt.restore": "one checkpoint restore (span)",
     "fault.fired": "a runtime.faults injection point fired",
+    "profile.start": "jax.profiler trace capture opened (perf.py; "
+                     "wall_ns correlates the XLA timeline)",
+    "profile.stop": "jax.profiler trace capture closed",
+    "bench.run": "one bench function in benchmarks/run.py (span)",
 }

@@ -1,6 +1,7 @@
 """Schema validator for obs artifacts — the CI metrics-smoke gate.
 
     python -m repro.obs.validate --metrics M.json --events E.jsonl \
+        --bench history.jsonl \
         --expect-counter serving_quarantined_total=1 \
         --expect-terminal-statuses ok,error \
         --expect-requests 3
@@ -11,6 +12,9 @@ Checks (exit non-zero with a message naming the first violation):
   (kinds, series shapes, histogram bucket-count lengths);
 * the events JSONL is a well-formed ``repro.obs.events/v1`` log (header
   line, per-record required fields);
+* ``--bench PATH`` — the file is a well-formed ``repro.obs.bench/v1``
+  history (run headers with env fingerprints, typed rows attached to a
+  known run; see ``repro.obs.perf``);
 * ``--expect-counter NAME=V`` — the counter's total (summed over label
   series) equals ``V``;
 * ``--expect-requests N`` — at least N distinct rids have a terminal
@@ -29,6 +33,7 @@ import argparse
 import json
 import sys
 
+from .perf import read_bench
 from .sinks import read_jsonl
 from .timeline import TERMINAL_STATUSES, request_timelines, terminal_events
 
@@ -116,14 +121,18 @@ def main(argv=None) -> int:
                     help="registry snapshot JSON (--metrics-out artifact)")
     ap.add_argument("--events", default=None,
                     help="JSONL event log (--events-out artifact)")
+    ap.add_argument("--bench", default=None,
+                    help="repro.obs.bench/v1 history JSONL "
+                         "(benchmarks/run.py --history artifact)")
     ap.add_argument("--expect-counter", action="append", default=[],
                     metavar="NAME=VALUE")
     ap.add_argument("--expect-requests", type=int, default=None)
     ap.add_argument("--expect-terminal-statuses", default=None,
                     metavar="S1,S2,...")
     args = ap.parse_args(argv)
-    if not args.metrics and not args.events:
-        ap.error("nothing to validate: pass --metrics and/or --events")
+    if not args.metrics and not args.events and not args.bench:
+        ap.error("nothing to validate: pass --metrics, --events and/or "
+                 "--bench")
     try:
         snapshot = None
         if args.metrics:
@@ -137,6 +146,13 @@ def main(argv=None) -> int:
             events = read_jsonl(args.events)
             validate_events(events)
             print(f"[obs.validate] {args.events}: {len(events)} events ok")
+        if args.bench:
+            runs = read_bench(args.bench)  # raises on schema violations
+            if not runs:
+                raise ValueError(f"{args.bench}: no bench runs")
+            nrows = sum(len(r["rows"]) for r in runs)
+            print(f"[obs.validate] {args.bench}: {len(runs)} run(s), "
+                  f"{nrows} rows ok")
         for spec in args.expect_counter:
             if snapshot is None:
                 raise ValueError("--expect-counter needs --metrics")

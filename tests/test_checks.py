@@ -360,6 +360,20 @@ def test_rpr007_metric_shapes(tmp_path):
     assert [f.line for f in fs] == [2, 3, 4, 5, 6]
 
 
+def test_rpr007_bench_row_names(tmp_path):
+    """bench history rows must be slash-separated snake_case paths."""
+    fs = lint(tmp_path, {
+        "benchmarks/b.py":
+            "def f(h):\n"
+            "    h.bench_row('ops/gla/decode_tok_per_s', 1.0, unit='x')\n"
+            "    h.bench_row('kernels/hla2_fwd', 1.0, unit='x')\n"
+            "    h.bench_row('BadName/row', 1.0, unit='x')\n"   # not snake
+            "    h.bench_row('single_segment', 1.0, unit='x')\n"  # no slash
+            "    h.bench_row('ops//empty', 1.0, unit='x')\n",     # empty seg
+    }, rules=["RPR007"])
+    assert [f.line for f in fs] == [4, 5, 6]
+
+
 def test_rpr007_schema_conformant_names_pass(tmp_path):
     fs = lint(tmp_path, {
         "serving/m.py":

@@ -1,0 +1,223 @@
+"""Cost-model conformance suite (DESIGN.md §15).
+
+Parametrized over EVERY registered ``SequenceOp``:
+
+* the analytic forward FLOPs/token land within a factor-of-2 band of
+  the XLA-measured dot FLOPs (loop-aware ``cost_analysis`` via
+  ``repro.analysis.hlo_analysis``) on small shapes — the calibration
+  contract ``benchmarks/run.py``'s utilization numbers rest on;
+* streaming ops' decode state is EXACTLY O(1) in sequence length (the
+  paper's constant-state claim, measured abstractly via ``eval_shape``);
+* the optional ``SequenceOp.cost_model`` hook overrides the family
+  state-math term without touching projections or state bytes.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.models import seq_op
+from repro.models.config import MambaConfig
+from repro.obs import costs
+
+ALL_OPS = seq_op.registered_op_names()
+STREAMING_OPS = seq_op.streaming_op_names()
+
+
+def _cfg_for(name):
+    base = get_config("hla-1b", reduced=True)
+    if name == "attn":
+        return base.replace(mixer="softmax")
+    if name == "mamba":
+        return base.replace(
+            mixer="mamba", mamba=MambaConfig(d_state=8, d_conv=4, expand=2)
+        )
+    return base.replace(mixer=name)
+
+
+# --------------------------------------------------------------------------
+# structure
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_OPS)
+@pytest.mark.parametrize("mode", costs.MODES)
+def test_cost_defined_for_every_mode(name, mode):
+    c = costs.op_cost(name, _cfg_for(name), mode=mode, seq_len=64)
+    assert c.op == name and c.mode == mode
+    assert c.flops_per_token > 0
+    assert c.bytes_per_token > 0
+    assert c.state_bytes >= 0
+    assert set(c.breakdown) >= {"proj_flops", "state_flops",
+                                "weight_bytes", "act_bytes",
+                                "state_traffic_bytes"}
+    d = c.as_dict()
+    assert d["flops_per_token"] == c.flops_per_token
+
+
+@pytest.mark.parametrize("name", ALL_OPS)
+def test_backward_costs_more_than_forward(name):
+    cfg = _cfg_for(name)
+    fwd = costs.op_cost(name, cfg, mode="train_fwd", seq_len=64)
+    bwd = costs.op_cost(name, cfg, mode="train_bwd", seq_len=64)
+    stp = costs.op_cost(name, cfg, mode="train_step", seq_len=64)
+    assert bwd.flops_per_token == pytest.approx(2 * fwd.flops_per_token)
+    assert stp.flops_per_token == pytest.approx(3 * fwd.flops_per_token)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError, match="mode"):
+        costs.op_cost("hla2", _cfg_for("hla2"), mode="inference")
+
+
+# --------------------------------------------------------------------------
+# calibration: analytic vs XLA dot FLOPs, factor-of-2 band
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_OPS)
+def test_analytic_flops_within_2x_of_xla(name):
+    """The tentpole acceptance band: on small shapes the analytic
+    forward FLOPs/token must sit within [0.5x, 2x] of what XLA actually
+    compiles (loop-aware, so scan-over-chunks bodies count per-trip)."""
+    cfg = _cfg_for(name)
+    analytic = costs.op_cost(name, cfg, mode="train_fwd", seq_len=64)
+    measured = costs.measured_op_flops(name, cfg, seq_len=64)["per_token"]
+    assert measured > 0
+    ratio = analytic.flops_per_token / measured
+    assert 0.5 <= ratio <= 2.0, (
+        f"{name}: analytic {analytic.flops_per_token:.0f} vs "
+        f"XLA {measured:.0f} FLOPs/token (ratio {ratio:.2f})"
+    )
+
+
+def test_xla_cost_reports_both_accounts():
+    """xla_cost carries the raw ``cost_analysis`` numbers alongside the
+    loop-aware account.  The two use different bases (raw counts every
+    elementwise op once; loop-aware counts dots only but multiplies
+    while-bodies by trip count) so they agree to a small factor on an
+    unrolled small shape rather than exactly."""
+    cfg = _cfg_for("hla2")
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.param import init_params
+
+    op = seq_op.get_op("hla2")
+    params = init_params(op.specs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 64, cfg.d_model),
+                          jnp.float32)
+
+    fwd = functools.partial(op.forward, cfg=cfg, state=None,
+                            want_state=False, positions=None)
+    cost = costs.xla_cost(lambda p, x: fwd(p, x)[0], params, x)
+    assert cost["raw_flops"] > 0
+    assert cost["flops"] > 0.5 * cost["raw_flops"]
+
+
+# --------------------------------------------------------------------------
+# the paper's constant-state claim: state bytes are O(1) in n
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", STREAMING_OPS)
+def test_streaming_state_bytes_constant_in_n(name):
+    cfg = _cfg_for(name)
+    op = seq_op.get_op(name)
+    sizes = [costs.record_state_bytes(op, cfg, max_len=n)
+             for n in (16, 64, 256, 1024)]
+    assert sizes[0] > 0
+    assert len(set(sizes)) == 1, (
+        f"{name}: state bytes vary with max_len: {sizes} "
+        "(violates the O(1)-state claim)"
+    )
+
+
+def test_attn_kv_cache_grows_with_n():
+    """The contrast case: softmax attention's KV cache is O(n)."""
+    cfg = _cfg_for("attn")
+    op = seq_op.get_op("attn")
+    s64 = costs.record_state_bytes(op, cfg, max_len=64)
+    s256 = costs.record_state_bytes(op, cfg, max_len=256)
+    # 4x the KV rows plus an O(1) cursor leaf
+    assert s64 > 0
+    assert s256 == pytest.approx(4 * s64, rel=0.01)
+
+
+@pytest.mark.parametrize("name", STREAMING_OPS)
+def test_streaming_decode_flops_constant_in_context(name):
+    cfg = _cfg_for(name)
+    short = costs.op_cost(name, cfg, mode="decode_step", seq_len=64)
+    long = costs.op_cost(name, cfg, mode="decode_step", seq_len=4096)
+    assert short.flops_per_token == pytest.approx(long.flops_per_token)
+
+
+def test_attn_decode_flops_grow_with_context():
+    cfg = _cfg_for("attn")
+    short = costs.op_cost("attn", cfg, mode="decode_step", seq_len=64)
+    long = costs.op_cost("attn", cfg, mode="decode_step", seq_len=4096)
+    assert long.breakdown["state_flops"] > 10 * short.breakdown["state_flops"]
+
+
+# --------------------------------------------------------------------------
+# the cost_model hook
+# --------------------------------------------------------------------------
+
+
+def test_cost_model_hook_overrides_state_terms():
+    """An op's cost_model replaces the family state math (and optionally
+    state traffic) — projections and state bytes stay record-derived."""
+    base_op = seq_op.get_op("linattn")
+    cfg = _cfg_for("linattn")
+    base = costs.record_cost(base_op, cfg, mode="train_fwd", seq_len=64)
+
+    def hook(cfg, *, mode, seq_len, batch):
+        return {"state_flops_per_token": 12345.0,
+                "state_bytes_per_token": 777.0}
+
+    hooked_op = dataclasses.replace(base_op, cost_model=hook)
+    hooked = costs.record_cost(hooked_op, cfg, mode="train_fwd", seq_len=64)
+    assert hooked.breakdown["state_flops"] == 12345.0
+    assert hooked.breakdown["state_traffic_bytes"] == 777.0
+    assert hooked.breakdown["proj_flops"] == base.breakdown["proj_flops"]
+    assert hooked.state_bytes == base.state_bytes
+
+
+def test_gla_registers_a_cost_model_hook():
+    """gla is the worked example: its record carries a cost_model and
+    the hook's numbers flow through op_cost."""
+    op = seq_op.get_op("gla")
+    assert op.cost_model is not None
+    cfg = _cfg_for("gla")
+    hook = op.cost_model(cfg, mode="decode_step", seq_len=64, batch=1)
+    assert hook["state_flops_per_token"] > 0
+    c = costs.op_cost("gla", cfg, mode="decode_step", seq_len=64)
+    assert c.breakdown["state_flops"] == hook["state_flops_per_token"]
+
+
+# --------------------------------------------------------------------------
+# whole-LM cost (what bench_ops utilization divides by)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["hla2", "attn", "gla"])
+def test_model_cost_exceeds_op_cost(name):
+    cfg = _cfg_for(name)
+    opc = costs.op_cost(name, cfg, mode="train_fwd", seq_len=64)
+    lmc = costs.model_cost(cfg, mode="train_fwd", seq_len=64)
+    assert lmc.op == f"lm/{seq_op.op_for(cfg).name}"
+    # embeddings + FFNs + unembed + n_layers of mixers dominate one mixer
+    assert lmc.flops_per_token > opc.flops_per_token
+    assert lmc.state_bytes == opc.state_bytes * cfg.n_layers
+
+
+def test_model_cost_scales_state_math_by_layers():
+    cfg = _cfg_for("hla2")
+    opc = costs.op_cost("hla2", cfg, mode="train_fwd", seq_len=64)
+    lmc = costs.model_cost(cfg, mode="train_fwd", seq_len=64)
+    assert lmc.breakdown["state_flops"] == pytest.approx(
+        opc.breakdown["state_flops"] * cfg.n_layers
+    )
