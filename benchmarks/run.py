@@ -394,71 +394,148 @@ def bench_decode_throughput(rows):
 
 
 def bench_serving(rows):
-    """Continuous-batching engine: TTFT + steady-state decode tok/s.
+    """Multi-tenant serving trace: heavy-tailed shared prefixes (Zipf),
+    Poisson arrivals, mixed priorities — sustained req/s, TTFT
+    cold-vs-hit, cache hit rate (DESIGN.md §16).
 
-    Chunk-parallel prefill admissions interleaved with block decode over
-    the reduced paper model (repro.serving.Engine); TTFT = admission ->
-    first sampled token (one prefill call + sample), steady-state tok/s =
-    generated tokens / decode wall time.
+    The trace draws each request's prompt as ``shared prefix + unique
+    suffix`` where the prefix is picked from a small pool with a Zipf
+    popularity law (a few prefixes carry most of the traffic, as system
+    prompts do), arrivals follow a Poisson process (exponential
+    inter-arrival gaps), and priority classes / tenants are mixed.  The
+    engine runs with the content-addressed ``PrefixCache``: the first
+    request on each prefix is a cold prefill that inserts the chunk-
+    aligned state snapshot, every later one resumes from it and prefills
+    only its suffix — TTFT splits into the cold and hit histograms.
     """
+    import collections
+
     from repro.configs import get_config
     from repro.models import lm
     from repro.models.param import init_params
-    from repro.serving import Engine, GenRequest
+    from repro.serving import Engine, GenRequest, PrefixCache
 
     cfg = get_config("hla-1b", reduced=True)
     params = init_params(lm.lm_specs(cfg), jax.random.key(0))
-    slots, prompt_len, gen_len, block = 4, 32, 32, 8
+    slots, gen_len, block, gran = 4, 16, 8, 16
+    prefix_len, n_reqs, n_prefixes = 2 * gran, 24, 4
+    suffix_lens = (4, 8, 12)  # few distinct lengths -> few jit signatures
+    max_len = prefix_len + max(suffix_lens) + gen_len + 8
     engine = Engine(
-        cfg, params, slots=slots,
-        max_len=prompt_len + gen_len + 8, block=block,
+        cfg, params, slots=slots, max_len=max_len, block=block,
+        cache=PrefixCache(granularity=gran, budget_bytes=1 << 30,
+                          namespace=cfg.name),
     )
     rng = np.random.RandomState(5)
-    reqs = [
-        GenRequest(rid=i, prompt=rng.randint(2, cfg.vocab, prompt_len),
-                   max_new=gen_len)
-        for i in range(8)
-    ]
-    # warm the jits (prefill trace + decode-block trace), then measure
-    # from a fresh obs epoch (zeroes every metric series + event ring)
-    engine.run([GenRequest(rid=-1, prompt=reqs[0].prompt, max_new=block)])
+    prefixes = [rng.randint(2, cfg.vocab, prefix_len)
+                for _ in range(n_prefixes)]
+    # Zipf popularity over the prefix pool (p ~ 1/rank^1.2)
+    pop = 1.0 / np.arange(1, n_prefixes + 1) ** 1.2
+    pop /= pop.sum()
+
+    def make_req(rid, prefix, suffix_len, *, priority=1, tenant="default"):
+        prompt = np.concatenate(
+            [prefix, rng.randint(2, cfg.vocab, suffix_len)])
+        return GenRequest(rid=rid, prompt=prompt, max_new=gen_len,
+                          priority=priority, tenant=tenant)
+
+    # -- warmup: trace every jit signature the measured trace will hit
+    # (cold full-prompt prefill and cached suffix-resume prefill, per
+    # distinct suffix length) against a throwaway prefix, then zero the
+    # obs epoch and drop the warmup cache entries
+    warm_prefix = rng.randint(2, cfg.vocab, prefix_len)
+    wid = -1
+    for s in suffix_lens:
+        for _ in range(2):  # first = cold + insert, second = hit + resume
+            engine.run([make_req(wid, warm_prefix, s)])
+            wid -= 1
+    engine.cache.clear()
     engine.obs.reset()
-    results = engine.run(reqs)
+
+    # -- build the trace: Zipf prefix choice, Poisson arrivals, mixed
+    # priority classes and tenants
+    gaps = rng.exponential(scale=0.003, size=n_reqs)  # ~3 ms mean gap
+    arrivals = np.cumsum(gaps)
+    trace = []
+    for i in range(n_reqs):
+        req = make_req(
+            i, prefixes[rng.choice(n_prefixes, p=pop)],
+            int(rng.choice(suffix_lens)),
+            priority=int(rng.choice([0, 1, 2], p=[0.1, 0.6, 0.3])),
+            tenant=str(rng.choice(["acme", "beta", "solo"])),
+        )
+        trace.append((float(arrivals[i]), req))
+
+    # -- drive: submit each request at its arrival time against the
+    # wall clock, tick the engine whenever work is pending
+    pending = collections.deque(trace)
+    t0 = time.perf_counter()
+    while pending or len(engine.scheduler) or engine.active.any():
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            engine.submit(pending.popleft()[1])
+        if len(engine.scheduler) or engine.active.any():
+            engine._drive_tick()
+        elif pending:
+            time.sleep(max(0.0, pending[0][0] - (time.perf_counter() - t0)))
+    wall_s = time.perf_counter() - t0
+
+    results = [engine.results[i] for i in range(n_reqs)]
+    assert all(r.status == "ok" for r in results), \
+        [(r.rid, r.status) for r in results if r.status != "ok"]
+    reg = engine.obs.registry
+    hits = reg.get("cache_hits_total").total()
+    misses = reg.get("cache_misses_total").total()
+    hit_rate = hits / max(hits + misses, 1)
+
+    def _q(hist_name, q):
+        h = reg.get(hist_name)
+        return 1e3 * (h.quantile(q) or 0.0)
+
+    cold_p50, cold_p99 = _q("serving_ttft_cold_seconds", 0.5), \
+        _q("serving_ttft_cold_seconds", 0.99)
+    hit_p50, hit_p99 = _q("serving_ttft_hit_seconds", 0.5), \
+        _q("serving_ttft_hit_seconds", 0.99)
+    req_per_s = n_reqs / max(wall_s, 1e-9)
     st = engine.stats
-    ttft_hist = engine.obs.registry.get("serving_ttft_seconds")
-    ttft_ms = 1e3 * float(np.mean(st["ttft_s"]))
-    ttft_p50 = 1e3 * (ttft_hist.quantile(0.5) or 0.0)
-    ttft_p99 = 1e3 * (ttft_hist.quantile(0.99) or 0.0)
-    ttft_iqr_ms = 1e3 * max(
-        (ttft_hist.quantile(0.75) or 0.0) - (ttft_hist.quantile(0.25) or 0.0),
-        0.0,
-    )
-    # exclude each request's first token (produced by prefill) from the
-    # steady-state decode rate
     decode_toks = sum(len(r.tokens) - 1 for r in results)
     tok_s = decode_toks / max(st["decode_s"], 1e-9)
     backend = jax.default_backend()
     rows.append((
-        "serving/ttft", ttft_ms * 1e3, ttft_iqr_ms * 1e3,
-        f"ttft_ms_p50={ttft_p50:.1f} p99={ttft_p99:.1f} "
-        f"prompt_len={prompt_len} backend={backend}",
+        "serving/trace", wall_s * 1e6, 0.0,
+        f"req_per_s={req_per_s:.1f} hit_rate={hit_rate:.2f} "
+        f"ttft_ms cold_p50={cold_p50:.1f}/p99={cold_p99:.1f} "
+        f"hit_p50={hit_p50:.1f}/p99={hit_p99:.1f} backend={backend}",
     ))
     rows.append((
         "serving/decode", 0.0, 0.0,
         f"tok_per_s={tok_s:.1f} slots={slots} block={block}",
     ))
-    _metric(rows, "serving/ttft_ms", ttft_ms, unit="ms",
-            direction="lower", dispersion=ttft_iqr_ms)
+    _metric(rows, "serving/req_per_s", req_per_s, unit="req/s",
+            direction="higher")
+    _metric(rows, "serving/ttft_cold_ms_p50", cold_p50, unit="ms",
+            direction="lower", dispersion=max(cold_p99 - cold_p50, 0.0))
+    _metric(rows, "serving/ttft_hit_ms_p50", hit_p50, unit="ms",
+            direction="lower", dispersion=max(hit_p99 - hit_p50, 0.0))
+    _metric(rows, "serving/cache_hit_rate", hit_rate, unit="ratio",
+            direction="higher")
     _metric(rows, "serving/decode_tok_per_s", tok_s, unit="tok/s",
             direction="higher")
     write_results("serving", {
         "backend": backend,
-        "shape": {"slots": slots, "prompt_len": prompt_len,
-                  "gen_len": gen_len, "block": block,
-                  "requests": len(reqs)},
-        "ttft_ms_mean": round(ttft_ms, 2),
-        "ttft_ms_p50": round(ttft_p50, 2),
-        "ttft_ms_p99": round(ttft_p99, 2),
+        "shape": {"slots": slots, "prefix_len": prefix_len,
+                  "suffix_lens": list(suffix_lens), "gen_len": gen_len,
+                  "block": block, "granularity": gran,
+                  "requests": n_reqs, "prefixes": n_prefixes},
+        "req_per_s": round(req_per_s, 2),
+        "wall_s": round(wall_s, 4),
+        "ttft_cold_ms_p50": round(cold_p50, 2),
+        "ttft_cold_ms_p99": round(cold_p99, 2),
+        "ttft_hit_ms_p50": round(hit_p50, 2),
+        "ttft_hit_ms_p99": round(hit_p99, 2),
+        "cache_hit_rate": round(hit_rate, 4),
+        "cache_hits": int(hits),
+        "cache_misses": int(misses),
         "decode_tok_per_s": round(tok_s, 1),
         "prefill_tok_per_s": round(
             st["prompt_tokens"] / max(st["prefill_s"], 1e-9), 1

@@ -52,8 +52,32 @@ from ..models import lm  # noqa: E402
 from ..models.param import init_params  # noqa: E402
 from ..obs import JsonlSink, Obs, profile_capture, write_metrics  # noqa: E402
 from ..runtime.faults import FaultPlan, parse_fault  # noqa: E402
-from ..serving import Engine, GenRequest, SamplingConfig, SpecConfig  # noqa: E402
+from ..serving import (  # noqa: E402
+    Engine,
+    GenRequest,
+    PrefixCache,
+    SamplingConfig,
+    SpecConfig,
+)
 from .mesh import make_mesh, mesh_summary  # noqa: E402
+
+
+def _run_streaming(engine, requests):
+    """Serve through the asyncio front-end: every request submitted
+    concurrently, each stream consumed by its own task, graceful drain
+    on exit.  Results come back in request order (same contract as
+    ``engine.run``)."""
+    import asyncio
+
+    from ..serving.server import AsyncServer, collect
+
+    async def _main():
+        async with AsyncServer(engine) as srv:
+            outs = await asyncio.gather(*[collect(srv, r)
+                                          for r in requests])
+        return [res for _, res in outs]
+
+    return asyncio.run(_main())
 
 
 def main(argv=None):
@@ -84,6 +108,20 @@ def main(argv=None):
                     help="configs entry for the --spec lm draft model "
                          "(loaded reduced)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the asyncio streaming front-end "
+                         "(serving.server.AsyncServer): per-token async "
+                         "generators, backpressure, graceful drain")
+    ap.add_argument("--cache-mb", type=float, default=0.0,
+                    help="prefix/state cache budget in MiB (0 = no "
+                         "cache); cache hits resume admission from an "
+                         "O(1) state snapshot (DESIGN.md §16)")
+    ap.add_argument("--cache-chunk", type=int, default=0,
+                    help="cache key granularity in tokens (0 = the "
+                         "model's chunk width)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens shared by every synthetic prompt — "
+                         "nonzero exercises prefix-cache hits")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request wall-clock budget; expiry -> "
                          "status=timeout with the partial stream")
@@ -136,20 +174,51 @@ def main(argv=None):
             spec=spec,
             obs=obs,
         )
+        shared = min(args.shared_prefix, args.prompt_len)
+        prefix = rng.randint(2, cfg.vocab, size=shared)
         requests = [
             GenRequest(
                 rid=i,
-                prompt=rng.randint(2, cfg.vocab, size=args.prompt_len),
+                prompt=np.concatenate([
+                    prefix,
+                    rng.randint(2, cfg.vocab,
+                                size=args.prompt_len - shared),
+                ]).astype(np.int64),
                 max_new=args.gen_len,
                 deadline_s=args.deadline_s,
             )
             for i in range(args.requests)
         ]
         # warm the prefill/decode jits so TTFT and tok/s measure steady
-        # state, not trace+compile (same protocol as benchmarks.run)
-        engine.run([GenRequest(
+        # state, not trace+compile (same protocol as benchmarks.run).
+        # Warmup MUST go through the measured execution mode: the jit
+        # cache keys on the ambient mesh-context stack, and the streaming
+        # server drives the engine from a worker thread where only the
+        # engine's own mesh context is active — a main-thread-only warmup
+        # would leave the measured run's first admissions to recompile.
+        runner = _run_streaming if args.stream else (
+            lambda eng, reqs: eng.run(reqs))
+        runner(engine, [GenRequest(
             rid=-1, prompt=requests[0].prompt, max_new=args.block,
         )])
+        cache = None
+        if args.cache_mb > 0:
+            gran = args.cache_chunk if args.cache_chunk else cfg.hla.chunk
+            if shared and shared < gran + 1:
+                print(f"[serve] note: shared prefix {shared} <= cache "
+                      f"granularity {gran}: no cache hits possible")
+            # warm the carry/resume jits against a throwaway cache so the
+            # measured run's first hit pays a lookup, not a compile
+            engine.cache = PrefixCache(
+                granularity=gran, budget_bytes=int(args.cache_mb * 2**20))
+            for rid in (-2, -3):  # miss + insert, then hit + resume
+                runner(engine, [GenRequest(
+                    rid=rid, prompt=requests[0].prompt, max_new=2)])
+            cache = PrefixCache(
+                granularity=gran, budget_bytes=int(args.cache_mb * 2**20),
+                namespace=cfg.name, obs=engine.obs,
+            )
+            engine.cache = cache
         # fresh obs epoch: zero every metric series and drop warmup
         # events, so the artifacts below describe only measured traffic
         engine.obs.reset()
@@ -164,7 +233,10 @@ def main(argv=None):
             engine.faults = FaultPlan(*[parse_fault(s) for s in args.inject])
         t0 = time.time()
         with profile_capture(args.profile_dir, obs=engine.obs):
-            results = engine.run(requests)
+            if args.stream:
+                results = _run_streaming(engine, requests)
+            else:
+                results = engine.run(requests)
         dt = time.time() - t0
         st = engine.stats
         gen = st["generated_tokens"]
@@ -200,6 +272,15 @@ def main(argv=None):
             f"quarantined={st['quarantined']} "
             f"breaker_trips={st['breaker_trips']}"
         )
+        if cache is not None:
+            cs = cache.stats()
+            print(
+                f"[serve] cache: {int(cs['entries'])} entries "
+                f"{cs['bytes'] / 2**20:.2f} MiB | hit rate "
+                f"{cs['hit_rate']:.2f} ({int(cs['hits'])} hits, "
+                f"{int(cs['misses'])} misses, "
+                f"{int(cs['evicted_bytes'])} bytes evicted)"
+            )
         if sink is not None:
             sink.close()
             print(f"[serve] events -> {args.events_out}")

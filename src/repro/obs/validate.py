@@ -17,6 +17,9 @@ Checks (exit non-zero with a message naming the first violation):
   known run; see ``repro.obs.perf``);
 * ``--expect-counter NAME=V`` — the counter's total (summed over label
   series) equals ``V``;
+* ``--expect-counter-min NAME=V`` — the counter's total is at least
+  ``V`` (for inherently trace-dependent tallies like cache hits, where
+  the exact count is policy but "it happened" is the contract);
 * ``--expect-requests N`` — at least N distinct rids have a terminal
   ``request.done`` event, every terminal status is one of the four
   legal ones, and every rid with ANY lifecycle event also has a
@@ -126,6 +129,8 @@ def main(argv=None) -> int:
                          "(benchmarks/run.py --history artifact)")
     ap.add_argument("--expect-counter", action="append", default=[],
                     metavar="NAME=VALUE")
+    ap.add_argument("--expect-counter-min", action="append", default=[],
+                    metavar="NAME=VALUE")
     ap.add_argument("--expect-requests", type=int, default=None)
     ap.add_argument("--expect-terminal-statuses", default=None,
                     metavar="S1,S2,...")
@@ -163,6 +168,17 @@ def main(argv=None) -> int:
                     f"counter {name} total = {got}, expected {want}"
                 )
             print(f"[obs.validate] counter {name} == {want} ok")
+        for spec in args.expect_counter_min:
+            if snapshot is None:
+                raise ValueError("--expect-counter-min needs --metrics")
+            name, want = spec.split("=", 1)
+            got = counter_total(snapshot, name)
+            if got < float(want):
+                raise ValueError(
+                    f"counter {name} total = {got}, expected >= {want}"
+                )
+            print(f"[obs.validate] counter {name} >= {want} ok "
+                  f"(got {got})")
         if args.expect_requests is not None:
             if events is None:
                 raise ValueError("--expect-requests needs --events")

@@ -26,6 +26,13 @@ Catalog (``FAULT_POINTS``: point name -> owner's contract):
   0); exercises poisoned-state quarantine.
 * ``engine.slow_block``— ``Engine.step_block`` sleeps ``arg`` seconds
   (default 0.05) before the block; exercises request deadlines.
+* ``cache.corrupt``    — the prefix/state cache flips bytes in one
+  leaf of the entry a lookup is about to return; its checksum check
+  must drop the entry and fall back to cold prefill
+  (``serving/cache.py``).
+* ``sched.stall``      — the scheduler refuses every admission for one
+  drive-loop tick (``serving/scheduler.py``); exercises queue growth
+  and queued-deadline expiry under scheduler pressure.
 * ``ckpt.save``        — ``CheckpointManager``'s save work raises
   ``InjectedFault`` (in the async thread: surfaced on the next
   ``wait()``/``save()``).
@@ -49,6 +56,8 @@ FAULT_POINTS: Dict[str, str] = {
     "engine.nan_state": "NaN written into one slot's decode state "
                         "(arg = slot index)",
     "engine.slow_block": "slow decode block (arg = sleep seconds)",
+    "cache.corrupt": "byte corruption of a prefix-cache entry at lookup",
+    "sched.stall": "scheduler admits nothing for one drive-loop tick",
     "ckpt.save": "checkpoint save failure (async thread)",
     "ckpt.corrupt": "byte corruption of a saved checkpoint leaf",
     "train.step": "training step failure (the old fail_at_step)",

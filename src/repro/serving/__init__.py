@@ -13,7 +13,18 @@ Layering:
                    sync per block;
 * ``spec``       — speculative decoding: drafters (n-gram / small HLA
                    LM), chunk-parallel exact verification, and
-                   state-snapshot rollback (DESIGN.md §10).
+                   state-snapshot rollback (DESIGN.md §10);
+* ``cache``      — content-addressed prefix/state cache: a cached
+                   prompt prefix is ONE O(1) state snapshot, looked up
+                   by rolling hash at chunk granularity and resumed
+                   exactly via the chunkwise carry identity
+                   (DESIGN.md §16);
+* ``scheduler``  — priority admission queue (priority class / deadline
+                   slack / tenant fair share), queued-deadline expiry,
+                   and slot-count autoscaling with hysteresis;
+* ``server``     — asyncio streaming facade: per-token async
+                   generators over the once-per-block sync, with
+                   consumer backpressure and graceful drain.
 
 The engine is also a failure-domain boundary (DESIGN.md §12): per-request
 statuses (``ok``/``error``/``timeout``/``cancelled``), deadline/cancel
@@ -24,8 +35,11 @@ deterministically testable through ``runtime.faults``.
 ``launch.serve`` is a thin CLI over ``engine.Engine``.
 """
 
+from .cache import PrefixCache, state_bytes_for  # noqa: F401
 from .engine import Engine, GenRequest, GenResult  # noqa: F401
 from .sampling import SamplingConfig, probs, sample  # noqa: F401
+from .scheduler import Scheduler, SchedulerConfig  # noqa: F401
+from .server import AsyncServer  # noqa: F401
 from .spec import (  # noqa: F401
     Drafter,
     HLADrafter,

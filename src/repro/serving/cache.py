@@ -1,0 +1,318 @@
+"""Content-addressed prefix/state cache — the HLA serving advantage.
+
+Softmax prefix caching is a memory-management problem: a cached prompt
+is a paged KV arena that grows with its length, so production servers
+build radix trees over block tables.  For the paper's streaming ops the
+entire prefix is summarized by a **constant-size sufficient statistic**
+(PAPER §2–3): a cached prefix is ONE O(1) state snapshot — a few small
+tensors per layer, independent of prefix length — so the cache is a
+dict of host arrays with a byte budget, not an allocator.
+
+Mechanics (DESIGN.md §16):
+
+* **Keying** — a polynomial rolling hash over the prompt token ids,
+  materialized at **chunk-granularity** prefix lengths (``granularity``
+  tokens, default the op's chunk width).  The key is pure token
+  content + the cache's ``namespace`` (model/params fingerprint), so
+  two tenants sharing a system prompt share the entry.  Hash collisions
+  cannot produce wrong tokens: every probe verifies the stored token
+  ids before hitting.
+* **Lookup** — longest-prefix: probe chunk-aligned prefix lengths from
+  the longest candidate down; the first verified entry wins.  Exactness
+  of resuming from the snapshot is the chunkwise carry identity the
+  prefill kernels already guarantee (``lm_prefill(states=...)``,
+  DESIGN.md §8) — tested token-for-token against cold decode.
+* **Insertion** — on prefill completion the engine snapshots the state
+  at the longest chunk-aligned prompt boundary and inserts it here.
+  Snapshots are HOST trees (``StatePool.snapshot_slot(host=True)``
+  semantics): hundreds of cached prefixes consume RAM, never HBM.
+* **Eviction** — LRU under an explicit byte budget.  Per-entry bytes
+  are measured from the actual leaves and cross-checked against the
+  analytic ``repro.obs.costs`` state-bytes model
+  (``state_bytes_for(cfg)``), which is also how a budget is sized
+  ("N cached prefixes" -> bytes).
+* **Integrity** — every entry carries a crc32 over its leaf bytes,
+  verified on every hit; a corrupt entry (``cache.corrupt`` fault
+  point, or a real bit flip) is dropped and the lookup falls through
+  to shorter prefixes / cold prefill.  A corrupt cache can cost
+  latency, never correctness.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..obs import Obs
+
+# polynomial rolling hash over token ids: h_{i+1} = h_i * _BASE + tok
+# mod 2^61-1.  Deterministic across processes (unlike hash()), cheap to
+# extend one token at a time, and collision-checked by token comparison.
+_MOD = (1 << 61) - 1
+_BASE = 1_000_003
+
+
+def rolling_hashes(tokens: np.ndarray, lengths: List[int]) -> List[int]:
+    """Hashes of ``tokens[:n]`` for each n in ``lengths`` (ascending),
+    in one O(len) pass."""
+    out, h, done = [], 0, 0
+    for n in lengths:
+        for t in tokens[done:n]:
+            h = (h * _BASE + int(t) + 1) % _MOD
+        done = n
+        out.append(h)
+    return out
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a host state snapshot's leaves."""
+    import jax
+
+    return int(sum(  # sync-point: host snapshot leaves, nbytes never syncs
+        np.asarray(leaf).nbytes for leaf in jax.tree.leaves(tree)))
+
+
+def tree_checksum(tree) -> int:
+    """crc32 over every leaf's raw bytes (order = tree leaf order)."""
+    import jax
+
+    crc = 0
+    for leaf in jax.tree.leaves(tree):
+        crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+    return crc
+
+
+def state_bytes_for(cfg, *, max_len: int = 64) -> int:
+    """Per-entry byte estimate from the analytic cost model: the whole
+    LM's decode-state bytes for one sequence (``repro.obs.costs``).
+    Sizing a budget as ``n_entries * state_bytes_for(cfg)`` caches
+    about n_entries prefixes regardless of their token lengths — the
+    O(1)-state property that makes this cache a dict, not an arena."""
+    from ..obs.costs import model_cost
+
+    return int(model_cost(cfg, mode="decode_step", seq_len=max_len)
+               .state_bytes)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: Tuple[int, int]          # (prefix_len, rolling hash)
+    tokens: np.ndarray            # the exact prefix ids (collision guard)
+    state: Any                    # host state pytree (numpy leaves)
+    nbytes: int
+    checksum: int
+    hits: int = 0
+
+
+class PrefixCache:
+    """Longest-prefix -> state-snapshot cache with LRU byte budgeting.
+
+    ``granularity`` is the chunk width prefixes are keyed at; the engine
+    passes its op's chunk so cache boundaries coincide with the chunkwise
+    kernels' natural resume points.  ``budget_bytes`` bounds HOST memory
+    (entries are numpy trees); inserting past it evicts least-recently-
+    used entries first.  ``namespace`` scopes keys to one model+params
+    identity — always set it when one process serves several models.
+
+    Thread-compat: all mutation happens on the engine drive loop; the
+    async server shares that loop, so no lock is needed (same contract
+    as ``Engine`` itself).
+    """
+
+    def __init__(self, *, granularity: int = 256,
+                 budget_bytes: int = 1 << 30, namespace: str = "",
+                 obs: Optional[Obs] = None, faults=None):
+        if granularity < 1:
+            raise ValueError(f"granularity must be >= 1: {granularity}")
+        if budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0: {budget_bytes}")
+        self.granularity = granularity
+        self.budget_bytes = budget_bytes
+        self.namespace = namespace
+        self.faults = faults
+        # key -> entry, ordered oldest-used first (OrderedDict LRU)
+        self._entries: "collections.OrderedDict[Tuple[int, int], CacheEntry]" \
+            = collections.OrderedDict()
+        self._lengths: collections.Counter = collections.Counter()
+        self.bytes = 0
+        self._own_obs = obs is None
+        self._declare_metrics(obs if obs is not None else Obs())
+
+    def bind_obs(self, obs: Obs) -> None:
+        """Re-home the cache's metric series into ``obs``.  The engine
+        calls this for caches built without an explicit bundle, so one
+        ``--metrics-out`` snapshot carries engine + scheduler + cache
+        counters together."""
+        self._own_obs = False
+        self._declare_metrics(obs)
+
+    def _declare_metrics(self, obs: Obs) -> None:
+        self.obs = obs
+        m = obs
+        self._m_hits = m.counter(
+            "cache_hits_total", "lookups that resumed from a snapshot")
+        self._m_misses = m.counter(
+            "cache_misses_total", "lookups with no usable prefix")
+        self._m_inserts = m.counter(
+            "cache_insertions_total", "entries inserted")
+        self._m_evicted = m.counter(
+            "cache_evicted_bytes_total", "bytes LRU-evicted over budget")
+        self._m_corrupt = m.counter(
+            "cache_corrupt_dropped_total",
+            "entries dropped on checksum mismatch")
+        self._m_entries = m.gauge("cache_entries", "live entries")
+        self._m_bytes = m.gauge("cache_bytes", "live host bytes")
+        self._m_hit_toks = m.histogram(
+            "cache_hit_prefix_tokens", "prefix tokens served from cache",
+            buckets=(16, 64, 256, 1024, 4096, 16384))
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        """Drop every entry (warmup epochs, tests).  Counters are
+        cumulative and unaffected; the entry/byte gauges go to zero."""
+        self._entries.clear()
+        self._lengths.clear()
+        self.bytes = 0
+        self._m_entries.set(0.0)
+        self._m_bytes.set(0.0)
+
+    # -- keying -------------------------------------------------------------
+
+    def _ns_seed(self) -> int:
+        return zlib.crc32(self.namespace.encode()) % _MOD
+
+    def _candidate_lengths(self, n_tokens: int,
+                           max_prefix: Optional[int]) -> List[int]:
+        """Chunk-aligned prefix lengths to probe, ascending.  Only
+        lengths that exist in the cache are worth hashing."""
+        cap = n_tokens if max_prefix is None else min(n_tokens, max_prefix)
+        return [n for n in sorted(self._lengths)
+                if n <= cap and self._lengths[n] > 0]
+
+    def aligned_len(self, n_tokens: int) -> int:
+        """Longest chunk-aligned prefix length strictly usable for a
+        prompt of ``n_tokens`` (at least one token must remain to
+        produce the first sampled logits)."""
+        return ((n_tokens - 1) // self.granularity) * self.granularity
+
+    # -- lookup / insert ----------------------------------------------------
+
+    def _drop(self, entry: CacheEntry) -> None:
+        self._entries.pop(entry.key, None)
+        self._lengths[entry.key[0]] -= 1
+        self.bytes -= entry.nbytes
+        self._m_entries.set(float(len(self._entries)))
+        self._m_bytes.set(float(self.bytes))
+
+    def _corrupt_if_injected(self, entry: CacheEntry) -> None:
+        """The ``cache.corrupt`` fault point: flip bytes in one leaf of
+        the entry the lookup is about to return."""
+        if self.faults is None:
+            return
+        import jax
+
+        if self.faults.hit("cache.corrupt") is None:
+            return
+        # snapshot leaves may be read-only (jax.device_get): corrupt a
+        # writable copy and splice it back into the entry's tree
+        flat, treedef = jax.tree.flatten(entry.state)
+        leaf = np.array(flat[0])
+        buf = leaf.view(np.uint8).reshape(-1)
+        buf[: max(1, buf.size // 16)] ^= 0xFF
+        flat[0] = leaf
+        entry.state = jax.tree.unflatten(treedef, flat)
+
+    def lookup(self, tokens, *, max_prefix: Optional[int] = None
+               ) -> Optional[Tuple[int, Any]]:
+        """Longest verified cached prefix of ``tokens``.
+
+        Returns ``(prefix_len, host_state)`` or None.  ``max_prefix``
+        caps the usable length (the engine passes ``len(prompt) - 1`` so
+        at least one suffix token remains to sample from).  Corrupt or
+        hash-colliding entries are dropped/skipped and the next-shorter
+        candidate is tried — a damaged cache degrades to cold prefill,
+        never to wrong tokens.
+        """
+        toks = np.asarray(tokens).reshape(-1)
+        lengths = self._candidate_lengths(len(toks), max_prefix)
+        if not lengths:
+            self._m_misses.inc()
+            return None
+        hashes = rolling_hashes(toks, lengths)
+        seed = self._ns_seed()
+        for n, h in zip(reversed(lengths), reversed(hashes)):
+            entry = self._entries.get((n, (h + seed) % _MOD))
+            if entry is None:
+                continue
+            if not np.array_equal(entry.tokens, toks[:n]):
+                continue  # hash collision: content mismatch, keep probing
+            self._corrupt_if_injected(entry)
+            if tree_checksum(entry.state) != entry.checksum:
+                self._drop(entry)
+                self._m_corrupt.inc()
+                self.obs.event("cache.corrupt_dropped", prefix_len=n)
+                continue
+            self._entries.move_to_end(entry.key)  # LRU touch
+            entry.hits += 1
+            self._m_hits.inc()
+            self._m_hit_toks.observe(float(n))
+            self.obs.event("cache.hit", prefix_len=n, hits=entry.hits)
+            return n, entry.state
+        self._m_misses.inc()
+        return None
+
+    def insert(self, tokens, state) -> bool:
+        """Insert a host state snapshot for the chunk-aligned prefix
+        ``tokens`` (insert-on-prefill-complete).  Refreshes LRU on
+        re-insertion of a live key.  Returns False when the entry was
+        rejected (misaligned length or larger than the whole budget)."""
+        toks = np.asarray(tokens).reshape(-1).astype(np.int64)
+        n = len(toks)
+        if n == 0 or n % self.granularity != 0:
+            return False
+        nbytes = tree_bytes(state)
+        if nbytes > self.budget_bytes:
+            return False
+        h = (rolling_hashes(toks, [n])[0] + self._ns_seed()) % _MOD
+        key = (n, h)
+        old = self._entries.get(key)
+        if old is not None and np.array_equal(old.tokens, toks):
+            self._entries.move_to_end(key)
+            return True  # already cached: refresh recency, keep the entry
+        if old is not None:
+            self._drop(old)  # same key, different tokens: collision — replace
+        entry = CacheEntry(key=key, tokens=toks, state=state, nbytes=nbytes,
+                           checksum=tree_checksum(state))
+        self._entries[key] = entry
+        self._lengths[n] += 1
+        self.bytes += nbytes
+        self._m_inserts.inc()
+        while self.bytes > self.budget_bytes and len(self._entries) > 1:
+            _, lru = next(iter(self._entries.items()))
+            if lru is entry:
+                break
+            self._drop(lru)
+            self._m_evicted.inc(lru.nbytes)
+            self.obs.event("cache.evicted", prefix_len=lru.key[0],
+                           nbytes=lru.nbytes)
+        self._m_entries.set(float(len(self._entries)))
+        self._m_bytes.set(float(self.bytes))
+        return True
+
+    def stats(self) -> Dict[str, float]:
+        hits = self._m_hits.total()
+        misses = self._m_misses.total()
+        return {
+            "entries": float(len(self._entries)),
+            "bytes": float(self.bytes),
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / max(hits + misses, 1.0),
+            "evicted_bytes": self._m_evicted.total(),
+        }

@@ -67,10 +67,12 @@ import numpy as np
 from ..models import lm, seq_op
 from ..obs import Obs
 from ..runtime.faults import FaultPlan
+from .cache import PrefixCache
 from .sampling import SamplingConfig, sample
+from .scheduler import Scheduler, SchedulerConfig
 from .spec import SpecConfig, build_drafter
 from .spec.verify import make_spec_round
-from .state_pool import StatePool, tree_finite
+from .state_pool import StatePool, tree_finite, tree_finite_host
 
 #: legacy ``Engine.stats`` keys -> unlabeled registry counters
 _STATS_COUNTERS = {
@@ -162,6 +164,10 @@ class GenRequest:
     # decode block re-traces when the SET of distinct configs across slots
     # changes; homogeneous traffic stays at one trace.
     sampling: Optional[SamplingConfig] = None
+    # scheduler policy inputs (DESIGN.md §16): lower priority numbers
+    # drain first; tenants within a priority class share slots fairly.
+    priority: int = 1
+    tenant: str = "default"
 
 
 @dataclasses.dataclass
@@ -193,6 +199,8 @@ class Engine:
         spec: Optional[SpecConfig] = None,
         faults: Optional[FaultPlan] = None,
         obs: Optional[Obs] = None,
+        cache: Optional[PrefixCache] = None,
+        sched: Optional[SchedulerConfig] = None,
     ):
         # serveability is a REGISTRY capability, not a hardcoded tuple:
         # any op registered with streaming=True (O(1) decode state) admits
@@ -221,6 +229,17 @@ class Engine:
         self.mesh = mesh
         self.spec = spec
         self.faults = faults
+        # slot-count autoscaling (DESIGN.md §16): the pool is allocated
+        # at the scheduler's max_slots once; the autoscaler varies how
+        # many of those physical slots admissions may fill.  Without a
+        # scheduler config the engine behaves exactly as before: a
+        # fixed-``slots`` FIFO (same-priority single-tenant ordering is
+        # arrival order).
+        if sched is not None:
+            slots = sched.max_slots
+        self.sched_cfg = sched if sched is not None else SchedulerConfig(
+            min_slots=slots, max_slots=slots
+        )
         # sharded serving: slot states get explicit shardings (slots on
         # the data axis, heads on the model axis) from the same source of
         # truth the train/dry-run steps use — never a replicated tree.
@@ -248,7 +267,12 @@ class Engine:
         self._slot_deadline: List[float] = [math.inf] * slots
         self._enqueue_t: Dict[int, float] = {}
         self._cancelled: Set[int] = set()
+        self._popped: Set[int] = set()  # rids holding a fair-share ticket
         self.results: Dict[int, GenResult] = {}
+        # per-token streaming hook (serving/server.py): called on the
+        # drive loop with (rid, new_tokens, result-or-None) after every
+        # commit and once at the terminal result.  Must not raise.
+        self.on_stream = None
         self.key = jax.random.key(seed)
         # spec circuit breaker: closed (speculating) -> open (plain
         # blocks, counting down cooldown) -> half_open (one probe round)
@@ -295,6 +319,27 @@ class Engine:
         self._m_slots = m.gauge(
             "serving_slots_active", "slots currently decoding")
         self.stats = _StatsShim(self.obs)  # legacy dict view (DEPRECATED)
+        # serving front-end (DESIGN.md §16): the admission scheduler owns
+        # queue order + the slot target; the optional prefix/state cache
+        # turns shared prompt prefixes into O(1) snapshot resumes.  Build
+        # the cache with THIS engine's obs bundle so its hit/miss/bytes
+        # counters land in the same registry snapshot.
+        self.scheduler = Scheduler(self.sched_cfg, obs=self.obs,
+                                   faults=faults)
+        self.cache = cache
+        if cache is not None and cache._own_obs:
+            cache.bind_obs(self.obs)
+        self._m_ttft_cold = m.histogram(
+            "serving_ttft_cold_seconds", "TTFT of cache-miss admissions")
+        self._m_ttft_hit = m.histogram(
+            "serving_ttft_hit_seconds",
+            "TTFT of admissions resumed from a cached prefix snapshot")
+        self._m_ttft_saved = m.histogram(
+            "serving_cache_ttft_saved_seconds",
+            "estimated prefill wall-clock avoided per cache hit "
+            "(cached prefix tokens x EWMA cold prefill s/token)")
+        # EWMA of cold prefill seconds/token — the TTFT-saved estimator
+        self._prefill_s_per_tok: Optional[float] = None
 
         pool = self.pool
 
@@ -307,6 +352,31 @@ class Engine:
                 jnp.isfinite(last_logits)
             )
             return tok, states, finite
+
+        def _prefill_from(params, prompt, positions, states, key, scfg):
+            # suffix prefill resumed from a cached prefix snapshot: exact
+            # by the chunkwise carry identity (DESIGN.md §8/§16) — the
+            # same ``lm_prefill(states=...)`` carry the spec verifier and
+            # the incremental-prefill tests already rely on
+            last_logits, states = lm.lm_prefill(
+                params, prompt, cfg, states=states, positions=positions
+            )
+            tok = sample(last_logits, key, scfg)
+            finite = tree_finite(states) & jnp.all(
+                jnp.isfinite(last_logits)
+            )
+            return tok, states, finite
+
+        def _carry_cold(params, prompt):
+            # prompt[:aligned] -> the chunk-boundary state the cache keeps
+            _, states = lm.lm_prefill(params, prompt, cfg)
+            return states
+
+        def _carry_from(params, prompt, positions, states):
+            _, states = lm.lm_prefill(
+                params, prompt, cfg, states=states, positions=positions
+            )
+            return states
 
         def _decode_block(params, states, tokens, positions, active, key,
                           sel, n_steps, scfgs):
@@ -348,6 +418,9 @@ class Engine:
             return states, tok, pos, toks, finite  # toks: (n_steps, slots)
 
         self._prefill = jax.jit(_prefill, static_argnames="scfg")
+        self._prefill_from = jax.jit(_prefill_from, static_argnames="scfg")
+        self._carry_cold = jax.jit(_carry_cold)
+        self._carry_from = jax.jit(_carry_from)
         self._decode_block = jax.jit(
             _decode_block, static_argnames=("n_steps", "scfgs")
         )
@@ -382,9 +455,15 @@ class Engine:
 
     def _bind_faults(self) -> Optional[FaultPlan]:
         """Fired injections self-document through the engine's tracer
-        (the plan may be attached after construction, e.g. post-warmup)."""
+        (the plan may be attached after construction, e.g. post-warmup).
+        The scheduler (``sched.stall``) and prefix cache
+        (``cache.corrupt``) share the engine's plan so one ``--inject``
+        schedule covers the whole front-end."""
         if self.faults is not None and self.faults.obs is None:
             self.faults.obs = self.obs
+        self.scheduler.faults = self.faults
+        if self.cache is not None and self.cache.faults is None:
+            self.cache.faults = self.faults
         return self.faults
 
     def _raise_fault(self, point: str) -> None:
@@ -446,11 +525,16 @@ class Engine:
     def admit(self, slot: int, req: GenRequest) -> int:
         """Prefill ``req`` into ``slot``; returns the first sampled token.
 
-        One chunk-parallel prefill call + one scatter write; live slots are
-        never read or written.  Raises on invalid requests and on prefill
-        failure — everything that can raise happens BEFORE the slot is
-        activated, so a failed admission leaves the engine untouched
-        (``run()`` converts the raise into a ``status="error"`` result).
+        Cold path: ONE chunk-parallel prefill call + one scatter write.
+        With a prefix cache attached (DESIGN.md §16) admission becomes:
+        longest-prefix lookup -> resume from the cached O(1) snapshot
+        and prefill only the uncached suffix (exact by the chunkwise
+        carry identity) -> snapshot the longest chunk-aligned prompt
+        boundary for future requests.  Live slots are never read or
+        written.  Raises on invalid requests and on prefill failure —
+        everything that can raise happens BEFORE the slot is activated,
+        so a failed admission leaves the engine untouched (``run()``
+        converts the raise into a ``status="error"`` result).
         """
         if self.active[slot]:
             raise ValueError(f"slot {slot} is busy")
@@ -463,20 +547,58 @@ class Engine:
                 f"(engine={self.sampling}, request={scfg})"
             )
         t0 = time.perf_counter()
+        L = len(prompt_np)
+        hit_len = 0
+        insert_at = 0
+        carry_state = None
         with self.obs.span("engine.prefill", rid=req.rid, slot=slot,
-                           prompt_len=len(prompt_np)):
+                           prompt_len=L):
             self._raise_fault("engine.prefill")
             self.key, sub = jax.random.split(self.key)
             prompt = jnp.asarray(prompt_np[None])
+            done = 0  # tokens already summarized into carry_state
+            if self.cache is not None:
+                self._bind_faults()  # cache.corrupt may fire in lookup
+                found = self.cache.lookup(prompt_np, max_prefix=L - 1)
+                if found is not None:
+                    hit_len, host_snap = found
+                    done, carry_state = hit_len, host_snap
+                aligned = self.cache.aligned_len(L)
+                if aligned > done:
+                    # advance to the chunk-aligned boundary first so its
+                    # state can be cached for future shared prefixes;
+                    # still chunk-parallel (one extra kernel call, both
+                    # calls together cover the prompt exactly once)
+                    seg = prompt[:, done:aligned]
+                    with self._mesh_ctx():
+                        if done == 0:
+                            carry_state = self._carry_cold(self.params, seg)
+                        else:
+                            carry_state = self._carry_from(
+                                self.params, seg,
+                                jnp.arange(done, aligned)[None],
+                                carry_state,
+                            )
+                    done, insert_at = aligned, aligned
             with self._mesh_ctx():
-                first, state1, finite = self._prefill(
-                    self.params, prompt, sub, scfg
-                )
+                if done == 0:
+                    first, state1, finite = self._prefill(
+                        self.params, prompt, sub, scfg
+                    )
+                else:
+                    first, state1, finite = self._prefill_from(
+                        self.params, prompt[:, done:],
+                        jnp.arange(done, L)[None], carry_state, sub, scfg,
+                    )
                 self.pool.write_slot(slot, state1)
-            # one sync per admission (TTFT endpoint); the health flag
-            # rides it — the span closes right after this existing sync
-            first_host, finite_host = jax.device_get(
-                (first[0], finite))  # sync-point: admission TTFT endpoint
+            # one sync per admission (TTFT endpoint); the health flag —
+            # and, on insertion admissions, the host copy of the
+            # boundary snapshot — ride it, and the span closes right
+            # after this existing sync
+            fetch = (first[0], finite) if insert_at == 0 else (
+                first[0], finite, carry_state)
+            got = jax.device_get(fetch)  # sync-point: admission TTFT endpoint
+            first_host, finite_host = got[0], got[1]
         if not bool(finite_host):
             self._m_quarantined.inc()
             self.pool.reset_slot(slot)
@@ -484,8 +606,23 @@ class Engine:
                 f"request {req.rid}: admission prefill produced a "
                 "non-finite state — slot quarantined"
             )
+        if insert_at and tree_finite_host(got[2]):
+            # insert-on-prefill-complete, AFTER the health gate: a
+            # poisoned boundary state must never become a cache entry
+            self.cache.insert(prompt_np[:insert_at], got[2])
         first_tok = int(first_host)
         ttft = time.perf_counter() - t0
+        if hit_len:
+            self._m_ttft_hit.observe(ttft)
+            if self._prefill_s_per_tok is not None:
+                self._m_ttft_saved.observe(
+                    hit_len * self._prefill_s_per_tok)
+        else:
+            self._m_ttft_cold.observe(ttft)
+            rate = ttft / L
+            self._prefill_s_per_tok = rate if \
+                self._prefill_s_per_tok is None else (
+                    0.9 * self._prefill_s_per_tok + 0.1 * rate)
         self.tokens = self.tokens.at[slot, 0].set(first_tok)
         self.positions = self.positions.at[slot, 0].set(len(prompt_np))
         self.active[slot] = True
@@ -503,7 +640,7 @@ class Engine:
         self._m_ttft.observe(ttft)
         self._m_slots.set(float(self.active.sum()))
         self.obs.event("request.admitted", rid=req.rid, slot=slot,
-                       prompt_len=len(prompt_np))
+                       prompt_len=len(prompt_np), cached_prefix=hit_len)
         self.obs.event("request.first_token", rid=req.rid,
                        ttft_s=round(ttft, 6))
         # the admission token goes through the ONE commit path, so a
@@ -528,18 +665,33 @@ class Engine:
         Returns True when the slot finished (and was freed)."""
         req = self._slot_req[slot]
         out = self._slot_out[slot]
+        n_before = len(out)
         for t in toks:
             if len(out) >= req.max_new or (
                 req.eos_id is not None and out and out[-1] == req.eos_id
             ):
                 break
             out.append(int(t))
+        self._emit_stream(req.rid, out[n_before:], None)
         if len(out) >= req.max_new or (
             req.eos_id is not None and req.eos_id in out
         ):
             self._finish(slot)
             return True
         return False
+
+    def _emit_stream(self, rid: int, toks: List[int],
+                     result: Optional[GenResult]) -> None:
+        """Feed the per-token streaming hook (serving/server.py).  A
+        broken hook must not poison the drive loop: its error is logged
+        as an event and streaming is disabled for the rest of the run."""
+        if self.on_stream is None:
+            return
+        try:
+            self.on_stream(rid, toks, result)
+        except Exception as e:  # pragma: no cover - defensive
+            self.obs.event("stream.hook_error", rid=rid, error=repr(e))
+            self.on_stream = None
 
     def _finish(self, slot: int, status: str = "ok",
                 error: Optional[str] = None) -> None:
@@ -556,6 +708,10 @@ class Engine:
         self.obs.event("request.done", rid=req.rid, status=status,
                        tokens=len(out),
                        ttft_s=round(self._slot_ttft[slot], 6))
+        if req.rid in self._popped:
+            self.scheduler.release(req)  # return the tenant's fair share
+            self._popped.discard(req.rid)
+        self._emit_stream(req.rid, [], self.results[req.rid])
         self.active[slot] = False
         self._m_slots.set(float(self.active.sum()))
         self._slot_req[slot] = None
@@ -578,6 +734,10 @@ class Engine:
         self._m_requests.inc(status=status)
         self.obs.event("request.done", rid=req.rid, status=status,
                        tokens=0, ttft_s=0.0)
+        if req.rid in self._popped:
+            self.scheduler.release(req)
+            self._popped.discard(req.rid)
+        self._emit_stream(req.rid, [], self.results[req.rid])
 
     def _quarantine(self, slot: int) -> None:
         """A slot's state went non-finite: reset the state (O(state), one
@@ -595,15 +755,20 @@ class Engine:
 
     def cancel(self, rid: int) -> bool:
         """Cancel a request: a live slot finishes immediately with
-        ``status="cancelled"`` and its partial stream; a queued rid is
-        marked and rejected at its admission attempt.  Returns False when
-        the request already finished (nothing to cancel)."""
+        ``status="cancelled"`` and its partial stream; a scheduler-queued
+        rid is dropped from the queue and finalized at once; an unknown
+        rid is marked and rejected at its admission attempt.  Returns
+        False when the request already finished (nothing to cancel)."""
         for s in range(self.pool.slots):
             req = self._slot_req[s]
             if self.active[s] and req is not None and req.rid == rid:
                 self._finish(s, status="cancelled",
                              error="cancelled while decoding")
                 return True
+        queued = self.scheduler.cancel(rid)
+        if queued is not None:
+            self._fail(queued, "cancelled", "cancelled while queued")
+            return True
         if rid in self.results:
             return False
         self._cancelled.add(rid)
@@ -857,28 +1022,44 @@ class Engine:
 
     # -- driver -------------------------------------------------------------
 
-    def run(self, requests: List[GenRequest]) -> List[GenResult]:
-        """Serve ``requests`` to completion with continuous batching.
-
-        Every request gets a terminal ``GenResult`` — per-request
-        failures (invalid admission, poisoned state, expired deadline,
-        cancellation, even a decode-block crash) become non-``ok``
-        statuses on their own results while unaffected slots keep
-        decoding; the drive loop itself never raises (CI-enforced)."""
-        rids = [r.rid for r in requests]
-        if len(set(rids)) != len(rids):
-            raise ValueError("request rids must be unique")
+    def submit(self, req: GenRequest) -> None:
+        """Queue one request with the admission scheduler.  Safe to call
+        between drive ticks (the async server submits as traffic
+        arrives); order of service is the scheduler's policy — priority
+        class, deadline slack, tenant fair share — not call order."""
         now = time.perf_counter()
-        for r in requests:
-            self._enqueue_t.setdefault(r.rid, now)
-            self.obs.event("request.queued", rid=r.rid)
-        pending = collections.deque(requests)
-        while pending or self.active.any():
-            self._m_queue.set(float(len(pending)))
+        self._enqueue_t.setdefault(req.rid, now)
+        self.scheduler.submit(req, now=now)
+        self.obs.event("request.queued", rid=req.rid,
+                       priority=req.priority, tenant=req.tenant)
+
+    def _drive_tick(self) -> None:
+        """One drive-loop iteration: expire queued deadlines, honor a
+        ``sched.stall``, autoscale the usable slot count, admit scheduler
+        winners into free slots, advance one decode block.  Never raises
+        — every failure becomes a per-request status (the ``run()``
+        while-loop's no-raise contract, CI-enforced, lives here)."""
+        self._bind_faults()
+        # queued-deadline expiry FIRST: an expired request must never
+        # consume a prefill, and learns its fate THIS tick even when no
+        # slot is free (starvation regression test)
+        for req in self.scheduler.expire():
+            self._fail(
+                req, "timeout",
+                f"deadline_s={req.deadline_s} expired before admission",
+            )
+        self._m_queue.set(float(len(self.scheduler)))
+        if not self.scheduler.stalled():
+            target = self.scheduler.target_slots()
             for s in self.free_slots():
+                if int(self.active.sum()) >= target:
+                    break
                 admitted = False
-                while pending and not admitted:
-                    req = pending.popleft()
+                while len(self.scheduler) and not admitted:
+                    req = self.scheduler.pop()
+                    if req is None:
+                        break
+                    self._popped.add(req.rid)
                     if req.rid in self._cancelled:
                         self._cancelled.discard(req.rid)
                         self._fail(req, "cancelled",
@@ -896,20 +1077,37 @@ class Engine:
                         admitted = True
                     except Exception as e:
                         self._fail(req, "error", f"admission failed: {e}")
-                if not pending and not admitted:
-                    break
-            if self.active.any():
-                try:
-                    self.step_block()
-                except Exception as e:
-                    # a failed block leaves every live slot's device state
-                    # suspect: fail them all (keeping partial streams) and
-                    # let the queue drain through fresh admissions
-                    for s in range(self.pool.slots):
-                        if self.active[s]:
-                            self._finish(
-                                s, status="error",
-                                error=f"decode block failed: {e!r}",
-                            )
+        if self.active.any():
+            try:
+                self.step_block()
+            except Exception as e:
+                # a failed block leaves every live slot's device state
+                # suspect: fail them all (keeping partial streams) and
+                # let the queue drain through fresh admissions
+                for s in range(self.pool.slots):
+                    if self.active[s]:
+                        self._finish(
+                            s, status="error",
+                            error=f"decode block failed: {e!r}",
+                        )
+
+    def run(self, requests: List[GenRequest]) -> List[GenResult]:
+        """Serve ``requests`` to completion with continuous batching.
+
+        Every request gets a terminal ``GenResult`` — per-request
+        failures (invalid admission, poisoned state, expired deadline,
+        cancellation, even a decode-block crash) become non-``ok``
+        statuses on their own results while unaffected slots keep
+        decoding; the drive loop itself never raises (CI-enforced).
+        Admission order is the scheduler's: equal-priority single-tenant
+        no-deadline traffic drains in arrival order (the old FIFO), and
+        priorities/deadlines/tenants reorder beyond that."""
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("request rids must be unique")
+        for r in requests:
+            self.submit(r)
+        while len(self.scheduler) or self.active.any():
+            self._drive_tick()
         self._m_queue.set(0.0)
         return [self.results[r.rid] for r in requests]

@@ -40,6 +40,21 @@ def tree_finite(tree) -> jnp.ndarray:
     return ok
 
 
+def tree_finite_host(tree) -> bool:
+    """Host-side ``tree_finite`` over an already-fetched (numpy) snapshot
+    — no device work.  Gates prefix-cache insertion: a poisoned boundary
+    state must never become a cache entry.  bf16 leaves are upcast for
+    the check (ml_dtypes arrays are not numpy-``inexact``)."""
+    import numpy as np
+
+    for leaf in jax.tree.leaves(tree):
+        arr = np.asarray(leaf)
+        if jnp.issubdtype(arr.dtype, jnp.inexact) and \
+                not np.isfinite(arr.astype(np.float32)).all():
+            return False
+    return True
+
+
 def _slot_axis(shape_a, shape_b, slots: int) -> Optional[int]:
     """Axis along which ``shape_b`` (slots+1) grew out of ``shape_a`` (slots)."""
     if tuple(shape_a) == tuple(shape_b):
@@ -213,7 +228,7 @@ class StatePool:
 
     # -- snapshot / rollback (speculative decoding) -------------------------
 
-    def snapshot_slot(self, slot: int):
+    def snapshot_slot(self, slot: int, *, host: bool = False):
         """O(state) snapshot of one slot's decode state.
 
         This is what makes rejection in speculative decoding cheap for
@@ -221,12 +236,25 @@ class StatePool:
         small state tuple per layer (KiB-scale), gathered with a
         ``dynamic_slice`` per leaf — no KV-cache truncation, no tree
         surgery, no growth with context length.
+
+        ``host=True`` returns numpy leaves instead of device arrays:
+        long-lived snapshots (the prefix/state cache holds hundreds of
+        them) then live in host RAM and consume zero HBM — and they stay
+        valid across pool resharding.  The transfer is a deliberate
+        device sync; callers on the hot path should keep ``host=False``.
         """
-        return self.read_slot(slot)
+        snap = self.read_slot(slot)
+        if not host:
+            return snap
+        return jax.device_get(snap)  # sync-point: host-RAM state snapshot
 
     def restore_slot(self, slot: int, snapshot) -> None:
-        """Roll ``slot`` back to ``snapshot`` (from ``snapshot_slot`` or a
-        replayed correction) in O(state): one scatter write per leaf.
+        """Roll ``slot`` back to ``snapshot`` (from ``snapshot_slot`` — host
+        or device — or a replayed correction) in O(state): one scatter
+        write per leaf.  Host (numpy) snapshots are re-placed as part of
+        the write: the jitted scatter's ``out_shardings`` pin the result
+        to the pool's NamedShardings, so a cache entry snapshotted from
+        one mesh layout restores correctly onto the pool's current one.
         Other slots' states are untouched, so a rejected continuation
         never perturbs concurrently-decoding requests.
         """
